@@ -1,0 +1,111 @@
+"""Ridge-regression benchmarks: paper Tables 2, 3, 8 and Fig. 9."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ridge
+from repro.core.types import DFRConfig
+from repro.data import PAPER_DATASETS
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm (jit)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out) if isinstance(out, jax.Array) else None
+    return (time.perf_counter() - t0) / reps
+
+
+def table2_memory_words(n_nodes: int = 30) -> List[Dict]:
+    """Memory footprint formulas (Table 2) for every paper dataset's Ny."""
+    rows = []
+    s = n_nodes * n_nodes + n_nodes + 1
+    for name, spec in PAPER_DATASETS.items():
+        naive = ridge.memory_words_naive(s, spec.n_classes)
+        prop = ridge.memory_words_proposed(s, spec.n_classes)
+        rows.append({
+            "table": "T2/T8-memory", "dataset": name, "s": s,
+            "n_y": spec.n_classes, "naive_words": naive,
+            "proposed_words": prop, "ratio": round(naive / prop, 2),
+        })
+    return rows
+
+
+def table3_op_counts(n_nodes: int = 30, n_y: int = 9) -> List[Dict]:
+    s = n_nodes * n_nodes + n_nodes + 1
+    naive = ridge.op_counts_naive(s, n_y)
+    prop = ridge.op_counts_proposed(s, n_y)
+    counted = ridge.count_ops_packed(s, n_y)
+    return [{
+        "table": "T3-ops", "s": s, "n_y": n_y,
+        "naive_addmul": naive["add"] + naive["mul"],
+        "proposed_addmul": prop["add"] + prop["mul"],
+        "enumerated_addmul": counted["add"] + counted["mul"],
+        "addmul_ratio": round((naive["add"] + naive["mul"]) /
+                              (prop["add"] + prop["mul"]), 1),
+        "proposed_sqrt": prop["sqrt"], "proposed_div": prop["div"],
+    }]
+
+
+def fig9_runtime_ratio(sizes=(10, 20, 30), n_ys=(2, 9, 20)) -> List[Dict]:
+    """Gaussian-elimination vs Cholesky ridge wall time (jitted, CPU)."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for nx in sizes:
+        s = nx * nx + nx + 1
+        R = rng.normal(size=(s, s + 16)).astype(np.float32)
+        B = jnp.asarray(R @ R.T + 0.1 * np.eye(s, dtype=np.float32))
+        for ny in n_ys:
+            A = jnp.asarray(rng.normal(size=(ny, s)).astype(np.float32))
+            t_g = _time(ridge.ridge_gaussian, A, B)
+            t_c = _time(ridge.ridge_cholesky_blocked, A, B)
+            rows.append({
+                "table": "Fig9-runtime", "n_x": nx, "s": s, "n_y": ny,
+                "gaussian_us": round(t_g * 1e6, 1),
+                "cholesky_us": round(t_c * 1e6, 1),
+                "ratio": round(t_g / t_c, 2),
+            })
+    return rows
+
+
+def table8_accuracy_parity(datasets=("JPVOW", "ECG"), size_cap=80) -> List[Dict]:
+    """Cholesky vs Gaussian ridge: identical accuracy (Table 8)."""
+    from repro.core import DFRModel
+    from repro.core.types import DFRParams
+    from repro.data import load
+
+    rows = []
+    for name in datasets:
+        train, test = load(name, size_cap=size_cap)
+        spec = PAPER_DATASETS[name]
+        cfg = DFRConfig(n_in=spec.n_in, n_classes=spec.n_classes, n_nodes=20)
+        m = DFRModel.create(cfg)
+        p0 = DFRParams.init(cfg)
+        accs = {}
+        for method in ("gaussian", "cholesky_blocked", "cholesky_packed"):
+            fitted = m.fit_ridge(train, p0, method=method)
+            accs[method] = round(float(m.accuracy(test, fitted)), 4)
+        s = cfg.s
+        rows.append({
+            "table": "T8-parity", "dataset": name, **accs,
+            "mem_naive": ridge.memory_words_naive(s, cfg.n_classes),
+            "mem_prop": ridge.memory_words_proposed(s, cfg.n_classes),
+        })
+    return rows
+
+
+def run(full: bool = False) -> List[Dict]:
+    rows = []
+    rows += table2_memory_words()
+    rows += table3_op_counts()
+    rows += fig9_runtime_ratio(sizes=(10, 20, 30) if full else (10, 20))
+    rows += table8_accuracy_parity(
+        datasets=tuple(PAPER_DATASETS) if full else ("JPVOW", "ECG")
+    )
+    return rows

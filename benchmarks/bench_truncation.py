@@ -1,0 +1,30 @@
+"""Truncated-backprop storage benchmark: paper Table 7."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import backprop
+from repro.core.types import DFRConfig
+from repro.data import PAPER_DATASETS
+
+
+def table7_storage(n_nodes: int = 30) -> List[Dict]:
+    rows = []
+    for name, spec in PAPER_DATASETS.items():
+        cfg = DFRConfig(n_in=spec.n_in, n_classes=spec.n_classes,
+                        n_nodes=n_nodes)
+        t = spec.t_max
+        naive = backprop.storage_words_naive(cfg, t)
+        simp = backprop.storage_words_truncated(cfg, t)
+        rows.append({
+            "table": "T7-truncation", "dataset": name, "t_max": t,
+            "naive_words": naive, "simplified_words": simp,
+            "reduction_pct": round(100.0 * (naive - simp) / naive, 1),
+            "bp_compute_factor": round(1.0 / t, 5),  # ~1/T compute cut
+        })
+    return rows
+
+
+def run(full: bool = False) -> List[Dict]:
+    del full
+    return table7_storage()

@@ -1,0 +1,87 @@
+"""Roofline report builder: reads artifacts/dryrun/*.json -> markdown table.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--tag baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+from typing import Dict, List
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(tag: str = "baseline") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(str(ART / f"*__{tag}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - | - "
+                f"| - | - | sub-quadratic required |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | - | - | "
+                f"- | - | - | {r.get('error','')[:60]} |")
+    rl = r["roofline"]
+    ur = r.get("useful_flops_ratio")
+    note = {
+        "compute": "MXU-bound",
+        "memory": "HBM-bound",
+        "collective": "ICI-bound",
+    }[rl["dominant"]]
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['dominant']} "
+        f"| {rl['compute_s']:.2f} | {rl['memory_s']:.2f} "
+        f"| {rl['collective_s']:.2f} | {rl['roofline_fraction']:.3f} "
+        f"| {ur:.3f} | {note} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | dominant | compute_s | memory_s | collective_s "
+    "| roofline_frac | useful_flops | note |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def build_table(tag: str = "baseline", mesh: str | None = None) -> str:
+    rows = load_records(tag)
+    if mesh:
+        rows = [r for r in rows if r["mesh"] == mesh]
+    lines = [HEADER]
+    for r in rows:
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def summary_csv(tag: str = "baseline") -> List[Dict]:
+    out = []
+    for r in load_records(tag):
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        out.append({
+            "table": "roofline", "cell": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+            "dominant": rl["dominant"],
+            "bound_s": round(rl["bound_s"], 3),
+            "roofline_frac": round(rl["roofline_fraction"], 4),
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    print(build_table(args.tag, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point - one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per table entry) and a
+human-readable summary.  ``--full`` runs the complete 12-dataset versions.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.pop("table")
+        key = r.pop("dataset", r.pop("cell", ""))
+        us = r.pop("bp_time_s", r.pop("gaussian_us", r.pop("bound_s", 0.0)))
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name}/{key},{us},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 12 datasets at full Table-4 sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: ridge,backprop,truncation,system,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_backprop, bench_ridge, bench_system,
+                            bench_truncation, roofline)
+
+    suites = {
+        "ridge": lambda: bench_ridge.run(args.full),
+        "backprop": lambda: bench_backprop.run(args.full),
+        "truncation": lambda: bench_truncation.run(args.full),
+        "system": lambda: bench_system.run(args.full),
+        "roofline": lambda: roofline.summary_csv(),
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+
+    t0 = time.time()
+    for name in selected:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            rows = suites[name]()
+            _emit([dict(r) for r in rows])
+        except Exception as ex:  # noqa: BLE001
+            print(f"{name},0,error={type(ex).__name__}:{ex}", file=sys.stderr)
+            raise
+    print(f"# done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

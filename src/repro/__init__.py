@@ -1,0 +1,5 @@
+"""repro: production-grade JAX training/inference framework built around the
+Delayed Feedback Reservoir online training system (Ikeda et al., TCAD 2025),
+with a multi-pod LM substrate, Pallas TPU kernels, and fault-tolerant runtime.
+"""
+__version__ = "1.0.0"

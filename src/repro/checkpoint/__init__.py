@@ -1,0 +1,2 @@
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint, load_manifest  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,38 @@
+"""repro.core - the paper's contribution: modular DFR online training system.
+
+Public API surface; see DESIGN.md for the paper-to-module map.
+"""
+from repro.core.types import (  # noqa: F401
+    DFRConfig,
+    DFRParams,
+    RidgeState,
+    TimeSeriesBatch,
+)
+from repro.core.masking import make_mask, apply_mask  # noqa: F401
+from repro.core.reservoir import (  # noqa: F401
+    run_reservoir,
+    reservoir_step,
+    reservoir_step_naive,
+    ring_matrix,
+    ring_powers,
+)
+from repro.core.dprr import compute_dprr, r_tilde, shifted_states  # noqa: F401
+from repro.core.ridge import (  # noqa: F401
+    ridge_solve,
+    ridge_gaussian,
+    ridge_cholesky_packed,
+    ridge_cholesky_blocked,
+    accumulate_ab,
+    regularize,
+)
+from repro.core.backprop import (  # noqa: F401
+    forward,
+    grads_truncated,
+    grads_truncated_manual,
+    grads_full_bptt,
+    loss_from_logits,
+)
+from repro.core.dfr import DFRModel  # noqa: F401
+from repro.core.online import OnlineDFR, OnlineState  # noqa: F401
+from repro.core.readout import DistributedDFRReadout, ReadoutConfig  # noqa: F401
+from repro.core.grid_search import grid_search, grid_search_until  # noqa: F401

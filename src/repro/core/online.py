@@ -1,0 +1,128 @@
+"""Online edge training + inference loop (paper Sec. 3.1): one fused step.
+
+The paper's system processes a stream sample-by-sample, entirely on-device:
+
+    reservoir forward -> DPRR -> (a) inference: y = W r + b
+                               -> (b) training: truncated-bp SGD update of
+                                      (p, q, W, b) AND streaming (A, B)
+                                      accumulation; the Ridge solve runs
+                                      periodically (or on demand) to refresh
+                                      the output layer.
+
+Everything below is a single jitted program per step - the TPU analogue of
+"everything on the FPGA, no host round trips".  ``OnlineDFR.step`` is also
+the unit that scales out: (A, B) and the parameter grads are associative
+sums, so the distributed variant (repro.core.readout) psums them across the
+data axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backprop, dprr, masking, reservoir, ridge
+from repro.core.types import Array, DFRConfig, DFRParams, RidgeState
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OnlineState:
+    """Carry of the online system (a pytree)."""
+
+    params: DFRParams
+    ridge: RidgeState
+    step: Array          # int32 counter
+    loss_ema: Array      # scalar diagnostics
+
+    def tree_flatten(self):
+        return (self.params, self.ridge, self.step, self.loss_ema), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+class OnlineDFR:
+    """Fused online train/infer stepper for a fixed-length stream window."""
+
+    def __init__(self, cfg: DFRConfig, mask: Optional[Array] = None):
+        self.cfg = cfg
+        if mask is None:
+            mask = masking.make_mask(
+                jax.random.PRNGKey(cfg.mask_seed), cfg.n_nodes, cfg.n_in, cfg.dtype
+            )
+        self.mask = mask
+
+    def init(self) -> OnlineState:
+        cfg = self.cfg
+        return OnlineState(
+            params=DFRParams.init(cfg),
+            ridge=RidgeState.zeros(cfg.s, cfg.n_classes, cfg.dtype),
+            step=jnp.zeros((), jnp.int32),
+            loss_ema=jnp.zeros((), cfg.dtype),
+        )
+
+    @partial(jax.jit, static_argnames=("self",))
+    def step(
+        self,
+        state: OnlineState,
+        u: Array,        # (B, T, n_in) window of streamed samples
+        length: Array,   # (B,)
+        label: Array,    # (B,) int32
+        lr_res: Array,
+        lr_out: Array,
+    ) -> Tuple[OnlineState, dict]:
+        """One online training step: SGD update + (A, B) accumulation."""
+        cfg = self.cfg
+        f = cfg.f()
+        j_seq = masking.apply_mask(self.mask, u)
+        onehot = jax.nn.one_hot(label, cfg.n_classes, dtype=cfg.dtype)
+        loss, g = backprop.grads_truncated(state.params, j_seq, onehot, f, lengths=length)
+        bsz = u.shape[0]
+        inv = 1.0 / bsz
+        params = backprop.apply_sgd(state.params, g, lr_res, lr_out, inv_batch=inv)
+        # streaming sufficient statistics with the *updated* reservoir params
+        x = reservoir.run_reservoir(params.p, params.q, j_seq, f=f, lengths=length)
+        r = dprr.compute_dprr(x, lengths=length)
+        rt = dprr.r_tilde(r)
+        A, B = ridge.accumulate_ab(state.ridge.A, state.ridge.B, rt, onehot)
+        new = OnlineState(
+            params=params,
+            ridge=RidgeState(A=A, B=B, count=state.ridge.count + bsz),
+            step=state.step + 1,
+            loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
+        )
+        logits = r @ params.W.T + params.b
+        metrics = {
+            "loss": loss * inv,
+            "acc": jnp.mean((jnp.argmax(logits, -1) == label).astype(jnp.float32)),
+        }
+        return new, metrics
+
+    @partial(jax.jit, static_argnames=("self",))
+    def infer(self, state: OnlineState, u: Array, length: Array) -> Array:
+        """Inference on a window: class predictions (B,)."""
+        cfg = self.cfg
+        f = cfg.f()
+        j_seq = masking.apply_mask(self.mask, u)
+        x = reservoir.run_reservoir(state.params.p, state.params.q, j_seq, f=f, lengths=length)
+        r = dprr.compute_dprr(x, lengths=length)
+        return jnp.argmax(r @ state.params.W.T + state.params.b, axis=-1)
+
+    @partial(jax.jit, static_argnames=("self", "method"))
+    def refresh_output(
+        self, state: OnlineState, beta: Array, method: str = "cholesky_blocked"
+    ) -> OnlineState:
+        """Ridge re-solve of the output layer from the streamed (A, B)."""
+        Wt = ridge.ridge_solve(
+            state.ridge.A, ridge.regularize(state.ridge.B, beta), method
+        )
+        params = DFRParams(
+            p=state.params.p, q=state.params.q, W=Wt[:, :-1], b=Wt[:, -1]
+        )
+        return dataclasses.replace(state, params=params)

@@ -1,0 +1,450 @@
+"""Ridge regression for the DFR output layer (paper Sec. 2.5 / 3.6).
+
+Solves  W~ = A B^{-1}  with  A = E R~^T (Ny, s),  B = R~ R~^T + beta I (s, s),
+s = Nx^2 + Nx + 1.
+
+Four implementations, from paper-faithful to TPU-production:
+
+1. ``ridge_gaussian_numpy``  - Algorithm 1 verbatim (Gauss-Jordan with an
+   explicit B^{-1}); the paper's "naive" baseline.  O(2s^3) flops,
+   2s(s+Ny)+1 words.
+2. ``ridge_cholesky_packed_numpy`` - Algorithms 2/3/4 verbatim: in-place
+   Cholesky inside a single 1-D packed array P[s(s+1)/2], then two in-place
+   triangular substitutions sharing Q with A/D/W.  s(s+2Ny)/2 + s/2 words.
+3. ``ridge_cholesky_packed_jax`` - the same packed in-place algorithm,
+   jit-compiled (vectorized inner dot products over contiguous packed rows -
+   the packed row-major layout the paper chose is exactly what makes this
+   possible).
+4. ``ridge_cholesky_blocked`` - the TPU adaptation: right-looking blocked
+   Cholesky + blocked TRSMs on 2-D tiles (MXU-aligned); the Pallas kernels in
+   ``repro.kernels`` implement the per-tile work, this module carries the
+   pure-jnp blocked reference.
+
+Memory-word and arithmetic-op count formulas of Tables 2/3 are provided for
+the benchmark harness.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Array
+
+# ---------------------------------------------------------------------------
+# Packed 1-D triangular indexing (paper Eq. 41): P[i(i+1)/2 + j] = B[i][j],
+# j <= i, rows stored contiguously.
+# ---------------------------------------------------------------------------
+
+
+def packed_size(s: int) -> int:
+    return s * (s + 1) // 2
+
+
+def packed_index(i, j):
+    return i * (i + 1) // 2 + j
+
+
+def pack_lower(B: Array) -> Array:
+    """Dense symmetric (s, s) -> packed 1-D lower triangle P[s(s+1)/2]."""
+    s = B.shape[0]
+    i, j = np.tril_indices(s)
+    return B[(i, j)]
+
+
+def unpack_lower(P: Array, s: int) -> Array:
+    """Packed 1-D -> dense lower-triangular (s, s) (upper = 0)."""
+    i, j = np.tril_indices(s)
+    out = jnp.zeros((s, s), P.dtype)
+    return out.at[(i, j)].set(P)
+
+
+# ---------------------------------------------------------------------------
+# 1. Paper Algorithm 1: Ridge via Gauss-Jordan elimination (the baseline).
+# ---------------------------------------------------------------------------
+
+
+def ridge_gaussian_numpy(A: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """Verbatim Algorithm 1 (loops and all).  Returns W~ (Ny, s)."""
+    A = np.asarray(A, np.float64 if A.dtype == np.float64 else np.float32).copy()
+    B = np.array(B, copy=True)
+    n_y, s = A.shape
+    Binv = np.zeros_like(B)
+    for i in range(s):  # lines 1-9: identity init
+        Binv[i, i] = 1.0
+    for i in range(s):  # lines 10-25: Gauss-Jordan
+        buf = 1.0 / B[i, i]
+        for j in range(s):
+            B[i, j] *= buf
+            Binv[i, j] *= buf
+        for j in range(s):
+            if i != j:
+                buf = B[j, i]
+                for k in range(s):
+                    B[j, k] -= B[i, k] * buf
+                    Binv[j, k] -= Binv[i, k] * buf
+    W = np.zeros((n_y, s), A.dtype)
+    for i in range(n_y):  # lines 26-33
+        for j in range(s):
+            acc = 0.0
+            for k in range(s):
+                acc += A[i, k] * Binv[k, j]
+            W[i, j] = acc
+    return W
+
+
+@jax.jit
+def ridge_gaussian(A: Array, B: Array) -> Array:
+    """Algorithm 1 with row operations vectorized (same pivot order, no
+    pivot search - B is SPD so the diagonal never vanishes)."""
+    s = B.shape[0]
+    Binv = jnp.eye(s, dtype=B.dtype)
+
+    def pivot(i, carry):
+        B, Binv = carry
+        buf = 1.0 / B[i, i]
+        brow = B[i] * buf
+        binvrow = Binv[i] * buf
+        B = B.at[i].set(brow)
+        Binv = Binv.at[i].set(binvrow)
+        col = B[:, i].at[i].set(0.0)  # eliminate everywhere but the pivot row
+        B = B - col[:, None] * brow[None, :]
+        Binv = Binv - col[:, None] * binvrow[None, :]
+        return B, Binv
+
+    B, Binv = jax.lax.fori_loop(0, s, pivot, (B, Binv))
+    return A @ Binv
+
+
+# ---------------------------------------------------------------------------
+# 2. Paper Algorithms 2/3/4 verbatim (numpy reference).
+# ---------------------------------------------------------------------------
+
+
+def cholesky_packed_numpy(P: np.ndarray, s: int) -> np.ndarray:
+    """Algorithm 2: in-place Cholesky in the packed 1-D array."""
+    P = np.array(P, copy=True)
+    for i in range(s):
+        for j in range(i):  # lines 2-4: diagonal update
+            P[i * (i + 1) // 2 + i] -= P[i * (i + 1) // 2 + j] ** 2
+        P[i * (i + 1) // 2 + i] = np.sqrt(P[i * (i + 1) // 2 + i])
+        buf = 1.0 / P[i * (i + 1) // 2 + i]
+        for j in range(i + 1, s):  # lines 7-12: column below the diagonal
+            for k in range(i):
+                P[j * (j + 1) // 2 + i] -= P[i * (i + 1) // 2 + k] * P[j * (j + 1) // 2 + k]
+            P[j * (j + 1) // 2 + i] *= buf
+    return P
+
+
+def trsm_packed_numpy(Q: np.ndarray, P: np.ndarray, s: int) -> np.ndarray:
+    """Algorithm 3: Q (storing A) -> D = A (C^T)^{-1}, in place."""
+    Q = np.array(Q, copy=True)
+    n_y = Q.shape[0]
+    for i in range(n_y):
+        for j in range(s):
+            for k in range(j):
+                Q[i, j] -= Q[i, k] * P[j * (j + 1) // 2 + k]
+            Q[i, j] /= P[j * (j + 1) // 2 + j]
+    return Q
+
+
+def trsm_packed_rev_numpy(Q: np.ndarray, P: np.ndarray, s: int) -> np.ndarray:
+    """Algorithm 4: Q (storing D) -> W~ = D C^{-1}, in place."""
+    Q = np.array(Q, copy=True)
+    n_y = Q.shape[0]
+    for i in range(n_y):
+        for j in range(s - 1, -1, -1):
+            for k in range(s - 1, j, -1):
+                Q[i, j] -= Q[i, k] * P[k * (k + 1) // 2 + j]
+            Q[i, j] /= P[j * (j + 1) // 2 + j]
+    return Q
+
+
+def ridge_cholesky_packed_numpy(A: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """Paper's full proposed pipeline: pack -> Alg 2 -> Alg 3 -> Alg 4."""
+    s = B.shape[0]
+    i, j = np.tril_indices(s)
+    P = np.ascontiguousarray(np.asarray(B)[(i, j)])
+    P = cholesky_packed_numpy(P, s)
+    Q = trsm_packed_numpy(np.asarray(A), P, s)
+    Q = trsm_packed_rev_numpy(Q, P, s)
+    return Q
+
+
+# ---------------------------------------------------------------------------
+# 3. The packed in-place algorithm, jit-compiled.
+#
+# The key observation that keeps this faithful *and* vectorizable: the paper's
+# row-major packed layout makes every inner dot product (Alg 2 line 9, Alg 3
+# line 4, Alg 4 line 4) a read over a *contiguous* packed row prefix.  We
+# slice fixed-size windows and mask, so the jitted program performs the exact
+# same in-place update order over the exact same 1-D array.
+# ---------------------------------------------------------------------------
+
+
+def _row_slice(Ppad: Array, j, s: int) -> Array:
+    """Packed row j (length j+1), zero-masked to fixed size s."""
+    start = j * (j + 1) // 2
+    row = jax.lax.dynamic_slice(Ppad, (start,), (s,))
+    return jnp.where(jnp.arange(s) <= j, row, 0.0)
+
+
+@partial(jax.jit, static_argnames=("s",))
+def cholesky_packed_jax(P: Array, s: int) -> Array:
+    """Algorithm 2, jitted; P has size s(s+1)/2 (padded internally)."""
+    Ppad = jnp.concatenate([P, jnp.zeros((s,), P.dtype)])
+    ar = jnp.arange(s)
+
+    def col_i(i, Ppad):
+        rowi = _row_slice(Ppad, i, s)
+        mask_lt_i = ar < i
+        diag = rowi[i] - jnp.sum(jnp.where(mask_lt_i, rowi * rowi, 0.0))
+        diag = jnp.sqrt(diag)
+        buf = 1.0 / diag
+        Ppad = Ppad.at[i * (i + 1) // 2 + i].set(diag)
+        rowi = rowi.at[i].set(diag)
+
+        def row_j(j, Ppad):
+            rowj = _row_slice(Ppad, j, s)
+            dot = jnp.sum(jnp.where(mask_lt_i, rowi * rowj, 0.0))
+            val = (rowj[i] - dot) * buf
+            return Ppad.at[j * (j + 1) // 2 + i].set(val)
+
+        return jax.lax.fori_loop(i + 1, s, row_j, Ppad)
+
+    Ppad = jax.lax.fori_loop(0, s, col_i, Ppad)
+    return Ppad[: packed_size(s)]
+
+
+@partial(jax.jit, static_argnames=("s",))
+def trsm_packed_jax(Q: Array, P: Array, s: int) -> Array:
+    """Algorithm 3 jitted: rows of Q solved left-to-right (vectorized over
+    the Ny rows, which the FPGA implementation partitions - Alg 5)."""
+    Ppad = jnp.concatenate([P, jnp.zeros((s,), P.dtype)])
+    ar = jnp.arange(s)
+
+    def col_j(j, Q):
+        rowj = _row_slice(Ppad, j, s)  # C[j, :j+1]
+        dot = Q @ jnp.where(ar < j, rowj, 0.0)  # (Ny,)
+        val = (Q[:, j] - dot) / rowj[j]
+        return Q.at[:, j].set(val)
+
+    return jax.lax.fori_loop(0, s, col_j, Q)
+
+
+@partial(jax.jit, static_argnames=("s",))
+def trsm_packed_rev_jax(Q: Array, P: Array, s: int) -> Array:
+    """Algorithm 4 jitted: W~ = D C^{-1}, columns solved right-to-left.
+
+    Alg 4's inner dot reads C[k, j] for k > j - a packed *column*, which is
+    strided.  We read it as a masked gather of P (the same memory, same
+    values; the FPGA pays the same BRAM accesses)."""
+    ar = jnp.arange(s)
+    col_starts = ar * (ar + 1) // 2  # start of each packed row
+
+    def col_j(t, Q):
+        j = s - 1 - t
+        colj = P[col_starts + j] * (ar >= j)  # C[:, j] masked (k >= j)
+        dot = Q @ jnp.where(ar > j, colj, 0.0)
+        val = (Q[:, j] - dot) / colj[j]
+        return Q.at[:, j].set(val)
+
+    return jax.lax.fori_loop(0, s, col_j, Q)
+
+
+def ridge_cholesky_packed(A: Array, B: Array) -> Array:
+    """Jitted packed pipeline (pack -> Alg 2 -> Alg 3 -> Alg 4)."""
+    s = B.shape[0]
+    i, j = np.tril_indices(s)
+    P = B[(i, j)]
+    P = cholesky_packed_jax(P, s)
+    Q = trsm_packed_jax(A, P, s)
+    return trsm_packed_rev_jax(Q, P, s)
+
+
+# ---------------------------------------------------------------------------
+# 4. Blocked (TPU-shaped) Cholesky ridge: pure-jnp reference of the Pallas
+#    kernels.  Right-looking, tile-by-tile in-place in a (nb, nb) grid of
+#    (bs, bs) tiles - only the lower triangle of tiles is ever touched,
+#    preserving the paper's storage insight at tile granularity.
+# ---------------------------------------------------------------------------
+
+
+def _chol_unblocked(a: Array) -> Array:
+    """Unblocked lower Cholesky of one tile via vectorized rank-1 updates."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, a):
+        d = jnp.sqrt(a[j, j])
+        col = jnp.where(idx > j, a[:, j] / d, 0.0).at[j].set(d)
+        a = a.at[:, j].set(jnp.where(idx >= j, col, a[:, j]))
+        # trailing update: a[j+1:, j+1:] -= col[j+1:] col[j+1:]^T
+        mask = (idx > j).astype(a.dtype)
+        upd = (col * mask)[:, None] * (col * mask)[None, :]
+        return a - upd
+
+    a = jax.lax.fori_loop(0, n, body, a)
+    return jnp.tril(a)
+
+
+def _trsm_right_lower_t(a: Array, L: Array) -> Array:
+    """Solve X L^T = a for X (columns left-to-right), L lower-triangular."""
+    n = L.shape[0]
+
+    def body(j, x):
+        dot = x @ L[j, :]  # only cols < j of x are final; L[j, k>j] = 0
+        # subtract the k == j self term that is not yet valid
+        val = (a[:, j] - dot + x[:, j] * L[j, j]) / L[j, j]
+        return x.at[:, j].set(val)
+
+    x0 = jnp.zeros_like(a)
+    return jax.lax.fori_loop(0, n, body, x0)
+
+
+def cholesky_blocked_jnp(B: Array, block: int = 128) -> Array:
+    """Blocked right-looking Cholesky (reference for the Pallas kernel)."""
+    s = B.shape[0]
+    pad = (-s) % block
+    Bp = jnp.pad(B, ((0, pad), (0, pad)))
+    # keep padded diagonal identity so the factorization stays defined
+    if pad:
+        eye = jnp.eye(s + pad, dtype=B.dtype)
+        Bp = Bp + eye * jnp.pad(jnp.zeros((s,), B.dtype), (0, pad), constant_values=1.0)
+    n = s + pad
+    nb = n // block
+    a = Bp
+    for kb in range(nb):
+        k0 = kb * block
+        diag = jax.lax.dynamic_slice(a, (k0, k0), (block, block))
+        Lkk = _chol_unblocked(diag)
+        a = jax.lax.dynamic_update_slice(a, Lkk, (k0, k0))
+        if kb + 1 < nb:
+            rest = n - k0 - block
+            panel = jax.lax.dynamic_slice(a, (k0 + block, k0), (rest, block))
+            Lpanel = _trsm_right_lower_t(panel, Lkk)
+            a = jax.lax.dynamic_update_slice(a, Lpanel, (k0 + block, k0))
+            trail = jax.lax.dynamic_slice(a, (k0 + block, k0 + block), (rest, rest))
+            trail = trail - Lpanel @ Lpanel.T
+            a = jax.lax.dynamic_update_slice(a, trail, (k0 + block, k0 + block))
+    return jnp.tril(a)[:s, :s]
+
+
+@jax.jit
+def ridge_cholesky_blocked(A: Array, B: Array, block: int = 128) -> Array:
+    """Production ridge solve: Cholesky + two triangular solves.
+
+    Never materializes B^{-1}; storage is one triangle + the (Ny, s) Q buffer,
+    i.e. the paper's memory claim at tile granularity.  On CPU the factor
+    comes from LAPACK potrf; on TPU the Pallas blocked kernels in
+    repro.kernels.ridge_solve implement the same pipeline
+    (cholesky_blocked_jnp below is their pure-jnp structural reference).
+    """
+    del block
+    C = jnp.linalg.cholesky(B)
+    # D = A (C^T)^{-1}  <=>  C D^T = A^T  (forward substitution)
+    D = jax.scipy.linalg.solve_triangular(C, A.T, lower=True).T
+    # W = D C^{-1}      <=>  C^T W^T = D^T (backward substitution)
+    W = jax.scipy.linalg.solve_triangular(C.T, D.T, lower=False).T
+    return W
+
+
+def ridge_cholesky_blocked_ref(A: Array, B: Array, block: int = 128) -> Array:
+    """Blocked-tile variant mirroring the Pallas kernel composition."""
+    C = cholesky_blocked_jnp(B, block)
+    D = jax.scipy.linalg.solve_triangular(C, A.T, lower=True).T
+    return jax.scipy.linalg.solve_triangular(C.T, D.T, lower=False).T
+
+
+def ridge_solve(A: Array, B: Array, method: str = "cholesky_blocked") -> Array:
+    """Dispatch: 'gaussian' | 'cholesky_packed' | 'cholesky_blocked'."""
+    if method == "gaussian":
+        return ridge_gaussian(A, B)
+    if method == "cholesky_packed":
+        return ridge_cholesky_packed(A, B)
+    if method == "cholesky_blocked":
+        return ridge_cholesky_blocked(A, B)
+    raise ValueError(f"unknown ridge method: {method}")
+
+
+# ---------------------------------------------------------------------------
+# Streaming sufficient statistics (paper Eq. 21-22, 38).
+# ---------------------------------------------------------------------------
+
+
+def accumulate_ab(A: Array, B: Array, r_tilde: Array, onehot: Array) -> Tuple[Array, Array]:
+    """Rank-k update of (A, B) with a batch of samples.
+
+    r_tilde: (batch, s), onehot: (batch, Ny).
+    """
+    A = A + jnp.einsum("bc,bs->cs", onehot, r_tilde)
+    B = B + jnp.einsum("bs,bt->st", r_tilde, r_tilde)
+    return A, B
+
+
+def regularize(B: Array, beta: Array) -> Array:
+    return B + beta * jnp.eye(B.shape[0], dtype=B.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Table 2 / Table 3 formulas (for the benchmark harness).
+# ---------------------------------------------------------------------------
+
+
+def memory_words_naive(s: int, n_y: int) -> int:
+    """Table 2 'naive': B + B^{-1} + A + W~ + buf = 2s(s+Ny) + 1 words."""
+    return 2 * s * (s + n_y) + 1
+
+
+def memory_words_proposed(s: int, n_y: int) -> int:
+    """Table 2 'proposed': P + Q = s(s+2Ny)/2 + s/2 words."""
+    return (s * (s + 2 * n_y) + s) // 2
+
+
+def op_counts_naive(s: int, n_y: int) -> dict:
+    """Table 3 'naive' (Gauss-Jordan) arithmetic op counts.
+
+    add: 2s^2(s + Ny/2) - 2s^2 = s^2(2s + Ny) - 2s^2;  mul: s^2(2s + Ny).
+    """
+    return {
+        "add": float(s * s * (2 * s + n_y) - 2 * s * s),
+        "mul": float(s * s * (2 * s + n_y)),
+        "div": float(s),
+        "sqrt": 0.0,
+    }
+
+
+def op_counts_proposed(s: int, n_y: int) -> dict:
+    """Table 3 'proposed' (1-D Cholesky) arithmetic op counts."""
+    return {
+        "add": s * s * (s + n_y) / 6 - s / 6 - s * n_y,
+        "mul": s * s * (s + n_y) / 6 + s * s / 2 - 2 * s / 3 - s * n_y,
+        "div": float(s + 2 * s * n_y),
+        "sqrt": float(s),
+    }
+
+
+def count_ops_packed(s: int, n_y: int) -> dict:
+    """Exact op count of Algorithms 2+3+4 by loop enumeration (used to
+    cross-check the Table 3 closed forms in the benchmark)."""
+    add = mul = div = sqrt = 0
+    for i in range(s):
+        add += i            # diagonal update subs
+        mul += i            # squares
+        sqrt += 1
+        div += 1            # buf = 1/diag  (paper counts the reciprocal)
+        for j in range(i + 1, s):
+            add += i
+            mul += i + 1    # dots + final *buf
+    # Alg 3: for each of Ny rows: sum_j (j subs + j muls + 1 div)
+    add += n_y * (s * (s - 1) // 2)
+    mul += n_y * (s * (s - 1) // 2)
+    div += n_y * s
+    # Alg 4: mirror of Alg 3
+    add += n_y * (s * (s - 1) // 2)
+    mul += n_y * (s * (s - 1) // 2)
+    div += n_y * s
+    return {"add": add, "mul": mul, "div": div, "sqrt": sqrt}

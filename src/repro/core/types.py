@@ -1,0 +1,171 @@
+"""Core dataclasses for the modular Delayed Feedback Reservoir (DFR).
+
+The modular DFR model (paper Eq. 14):
+
+    x(k)_n = p * f(j(k)_n + x(k-1)_n) + q * x(k)_{n-1}
+
+with the loop-wrap convention x(k)_0 := x(k-1)_{Nx} (the feedback loop is a
+ring of virtual nodes), masking j(k) = M @ u(k), and the DPRR readout
+
+    r = vec( sum_k x(k) [x(k-1), 1]^T ),   r_tilde = [r, 1].
+
+Only two reservoir parameters (p, q) plus the output layer (W, b) are
+trainable; the mask M is fixed random, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Nonlinearities f for the modular DFR block.  The paper's evaluation uses
+# f(x) = alpha * x (recommended in [11]); Mackey-Glass and tanh are provided
+# for the analog-DFR reference path and ablations.
+# ---------------------------------------------------------------------------
+
+def f_linear(z: Array, alpha: float = 1.0) -> Array:
+    return alpha * z
+
+
+def f_tanh(z: Array, alpha: float = 1.0) -> Array:
+    return jnp.tanh(alpha * z)
+
+
+def f_mackey_glass(z: Array, mg_p: float = 2.0) -> Array:
+    """Mackey-Glass style saturation f(z) = z / (1 + z^p) (paper Eq. 3)."""
+    return z / (1.0 + jnp.abs(z) ** mg_p)
+
+
+NONLINEARITIES: dict[str, Callable[..., Array]] = {
+    "linear": f_linear,
+    "tanh": f_tanh,
+    "mackey_glass": f_mackey_glass,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DFRConfig:
+    """Static configuration of a modular DFR classifier."""
+
+    n_in: int                      # #V  input channels
+    n_classes: int                 # #C  output classes
+    n_nodes: int = 30              # Nx  virtual nodes (paper uses 30)
+    nonlinearity: str = "linear"   # f;  paper evaluation uses linear
+    alpha: float = 1.0             # f scale (folded into p for linear f)
+    p_init: float = 0.01           # paper Sec. 4.1
+    q_init: float = 0.01           # paper Sec. 4.1
+    epochs: int = 25               # paper Sec. 4.1
+    lr: float = 1.0                # paper Sec. 4.1
+    # LR is multiplied by 0.1 at these epochs (reservoir / output layer):
+    res_lr_drop_epochs: Tuple[int, ...] = (5, 10, 15, 20)
+    out_lr_drop_epochs: Tuple[int, ...] = (10, 15, 20)
+    betas: Tuple[float, ...] = (1e-6, 1e-4, 1e-2, 1e0)  # ridge reg. sweep
+    mask_seed: int = 0
+    dtype: Any = jnp.float32
+
+    @property
+    def n_rep(self) -> int:
+        """N_r: DPRR feature count = Nx * (Nx + 1)."""
+        return self.n_nodes * (self.n_nodes + 1)
+
+    @property
+    def s(self) -> int:
+        """s = Nx^2 + Nx + 1 (paper Eq. 20): ridge system size."""
+        return self.n_nodes * self.n_nodes + self.n_nodes + 1
+
+    def f(self) -> Callable[[Array], Array]:
+        fn = NONLINEARITIES[self.nonlinearity]
+        if self.nonlinearity == "mackey_glass":
+            return lambda z: fn(z)
+        return lambda z: fn(z, self.alpha)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DFRParams:
+    """Trainable parameters of the DFR system (a pytree)."""
+
+    p: Array      # scalar reservoir gain on the nonlinear branch
+    q: Array      # scalar reservoir gain on the ring branch
+    W: Array      # (Ny, Nr) output weights
+    b: Array      # (Ny,)    output bias
+
+    def tree_flatten(self):
+        return (self.p, self.q, self.W, self.b), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def init(cls, cfg: DFRConfig) -> "DFRParams":
+        dt = cfg.dtype
+        return cls(
+            p=jnp.asarray(cfg.p_init, dt),
+            q=jnp.asarray(cfg.q_init, dt),
+            W=jnp.zeros((cfg.n_classes, cfg.n_rep), dt),
+            b=jnp.zeros((cfg.n_classes,), dt),
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RidgeState:
+    """Streaming sufficient statistics for Ridge regression (paper Eq. 21-22).
+
+    A = E R~^T      (Ny, s)
+    B = R~ R~^T     (s, s)   (beta * I added at solve time)
+
+    Both are sums over samples, hence associative: they accumulate online
+    one sample at a time (the paper's edge system) and reduce across data
+    shards with a single psum (this framework's at-scale extension).
+    """
+
+    A: Array
+    B: Array
+    count: Array  # number of accumulated samples (scalar)
+
+    def tree_flatten(self):
+        return (self.A, self.B, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, s: int, n_classes: int, dtype=jnp.float32) -> "RidgeState":
+        return cls(
+            A=jnp.zeros((n_classes, s), dtype),
+            B=jnp.zeros((s, s), dtype),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeSeriesBatch:
+    """A padded batch of variable-length multivariate time series.
+
+    u:       (B, T_max, n_in) float inputs, zero padded past `length`.
+    length:  (B,) int32 true lengths  (1 <= length <= T_max).
+    label:   (B,) int32 class ids.
+    """
+
+    u: Array
+    length: Array
+    label: Array
+
+    @property
+    def batch(self) -> int:
+        return self.u.shape[0]
+
+    @property
+    def t_max(self) -> int:
+        return self.u.shape[1]

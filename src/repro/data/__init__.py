@@ -1,0 +1,6 @@
+from repro.data.timeseries import (  # noqa: F401
+    PAPER_DATASETS,
+    DatasetSpec,
+    load,
+    make_dataset,
+)

@@ -1,0 +1,242 @@
+"""Logical-axis sharding rules engine (FSDP + TP over the production mesh).
+
+Every parameter is initialized together with a tuple of *logical* axis names
+(e.g. ("embed", "heads", "head_dim")).  A rule table maps logical names to
+mesh axes; the same params code therefore runs on a single device (rules
+resolve to nothing), one pod (data=16, model=16), or multi-pod
+(pod=2, data=16, model=16).
+
+Default placement (MaxText-style FSDP+TP hybrid):
+    vocab / heads / kv / mlp / expert_mlp -> "model"   (tensor parallel)
+    embed / expert                        -> "data"    (FSDP weight shard)
+    batch                                 -> ("pod", "data") for activations
+    layers / head_dim / seq / state       -> replicated
+
+A ``MeshContext`` (set by the launcher) makes ``shard_act`` constraints
+active; without one everything is a no-op so unit tests run untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+# rule: logical name -> mesh axis name (or tuple of mesh axes, or None)
+Rules = Dict[str, Any]
+
+DEFAULT_RULES: Rules = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "embed": "data",
+    "embed_no_shard": None,
+    "expert": "data",
+    "batch": ("pod", "data"),
+    "act_model": "model",
+    "kv_alt": "model",
+    "layers": None,
+    "head_dim": None,
+    "seq": None,
+    "state": None,
+    "conv": None,
+    None: None,
+}
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Optional[Mesh]
+    rules: Rules
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[name]
+
+
+_STATE = threading.local()
+
+
+def current() -> MeshContext:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        ctx = MeshContext(mesh=None, rules=dict(DEFAULT_RULES))
+    return ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = MeshContext(mesh=mesh, rules=dict(rules or DEFAULT_RULES))
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def _resolve(logical: Optional[str], rules: Rules, mesh: Optional[Mesh]):
+    """Logical axis -> mesh axis (filtered to axes that exist in the mesh)."""
+    target = rules.get(logical, None)
+    if target is None or mesh is None:
+        return None
+    names = mesh.axis_names
+    if isinstance(target, (tuple, list)):
+        present = tuple(t for t in target if t in names)
+        return present if present else None
+    return target if target in names else None
+
+
+def spec_for(axes: LogicalAxes, rules: Optional[Rules] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a parameter with the given logical axes.
+
+    Divisibility guard: a mesh axis is only applied if the (unknown here)
+    dimension is assumed padded by the config layer; configs are responsible
+    for padding vocab/mlp/etc. to multiples of the mesh axis size.
+    """
+    ctx = current()
+    rules = rules or ctx.rules
+    mesh = mesh or ctx.mesh
+    return P(*[_resolve(a, rules, mesh) for a in axes])
+
+
+def sharding_for(axes: LogicalAxes, mesh: Optional[Mesh] = None,
+                 rules: Optional[Rules] = None) -> Optional[NamedSharding]:
+    ctx = current()
+    mesh = mesh or ctx.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+
+def shard_act(x: jax.Array, axes: LogicalAxes) -> jax.Array:
+    """with_sharding_constraint if a mesh context is active, else identity.
+
+    Uses the divisibility-guarded spec: constraining an indivisible dim
+    makes XLA SPMD fall back to full rematerialization (replicate +
+    repartition), which is both slow and memory-hostile.
+    """
+    ctx = current()
+    if ctx.mesh is None:
+        return x
+    spec = guarded_spec(tuple(x.shape), tuple(axes), ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def fsdp_gather(w: jax.Array, axes: LogicalAxes) -> jax.Array:
+    """Constrain a parameter at its use site to its TP-only sharding (FSDP
+    axes dropped) - the explicit 'gather weights over data' of FSDP/ZeRO-3.
+
+    Without this, XLA SPMD sometimes reshards the (larger, f32) activations
+    over 'model' instead of gathering the bf16 weight over 'data' when a dot
+    contracts an fsdp-sharded dimension - measured 2-4x collective-bytes
+    regressions (EXPERIMENTS.md S4, rwkv6 iterations).
+    """
+    ctx = current()
+    if ctx.mesh is None:
+        return w
+    rules = dict(ctx.rules)
+    rules["embed"] = None
+    rules["expert"] = None
+    spec = guarded_spec(tuple(w.shape), tuple(axes), ctx.mesh, rules)
+    return jax.lax.with_sharding_constraint(w, NamedSharding(ctx.mesh, spec))
+
+
+def tree_specs(axes_tree) -> Any:
+    """Map a pytree of logical-axes tuples -> pytree of PartitionSpec."""
+    return jax.tree_util.tree_map(
+        lambda axes: spec_for(tuple(axes)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+def tree_shardings(axes_tree, mesh: Optional[Mesh] = None) -> Any:
+    ctx = current()
+    mesh = mesh or ctx.mesh
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(mesh, spec_for(tuple(axes), mesh=mesh)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+def guarded_spec(
+    shape: Tuple[int, ...],
+    axes: LogicalAxes,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Rules] = None,
+) -> P:
+    """PartitionSpec with divisibility + uniqueness guards.
+
+    A mesh axis is applied to a dimension only if (a) the dim size is
+    divisible by the mesh-axis-product and (b) no earlier dimension of this
+    array already claimed that mesh axis.  This is what lets one rule table
+    serve every architecture (e.g. qwen1.5's 8 KV heads fall back from
+    'kv'->model to 'kv_alt' on head_dim).
+    """
+    ctx = current()
+    rules = rules or ctx.rules
+    mesh = mesh or ctx.mesh
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    used: set = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        resolved = _resolve(logical, rules, mesh)
+        names = (
+            resolved if isinstance(resolved, tuple)
+            else (resolved,) if resolved else ()
+        )
+        names = tuple(n for n in names if n not in used)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if names and size > 1 and dim % size == 0:
+            used.update(names)
+            out.append(names if len(names) > 1 else names[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def guarded_shardings(shapes_tree, axes_tree, mesh: Optional[Mesh] = None,
+                      rules: Optional[Rules] = None):
+    """Pytree of ShapeDtypeStruct x pytree of axes -> NamedShardings."""
+    ctx = current()
+    mesh = mesh or ctx.mesh
+    if mesh is None:
+        return None
+    # tree_map flattens axes_tree up to shapes_tree's structure, so the
+    # per-leaf axes tuples arrive intact
+    return jax.tree_util.tree_map(
+        lambda sh, axes: NamedSharding(
+            mesh, guarded_spec(tuple(sh.shape), tuple(axes), mesh, rules)
+        ),
+        shapes_tree,
+        axes_tree,
+    )
+
+
+def data_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    """Mesh axes that carry data parallelism (for psums/grad reductions)."""
+    ctx = current()
+    mesh = mesh or ctx.mesh
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

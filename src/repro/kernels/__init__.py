@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the DFR hot spots, with jnp oracles.
+
+Layout (per kernel): <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ops.py the public jit'd wrappers (backend dispatch + padding contracts),
+ref.py the pure-jnp oracles tests assert against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,132 @@
+"""Pallas TPU kernels: blocked Cholesky factorization + triangular solves.
+
+TPU adaptation of the paper's in-place 1-D Cholesky (Alg. 2-4).  The packed
+triangular addressing that suits FPGA BRAM defeats the MXU, so the *insight*
+(exploit SPD symmetry; never form B^{-1}; share storage) is carried at tile
+granularity instead:
+
+  * ``chol_block``   - unblocked factorization of one (bs, bs) VMEM tile via
+                       vectorized rank-1 updates (Alg. 2's update order,
+                       column panels instead of scalars).
+  * ``trsm_lower_t`` - X L^T = A (Alg. 3 on tiles: forward substitution over
+                       columns, rows vectorized - the same row-parallelism
+                       the paper's write-buffer/partitioned-Q trick buys).
+  * ``trsm_lower``   - X L = D (Alg. 4 on tiles: backward substitution).
+
+The inner dot products accumulate in VREGs and each output column is written
+once - the TPU analogue of Alg. 5's RegSize write buffer (see DESIGN.md).
+
+The blocked *driver* composing these into a full factorization lives in
+``repro.kernels.ops`` (panel TRSM + SYRK trailing update between tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Tile Cholesky
+# ---------------------------------------------------------------------------
+
+
+def _chol_block_kernel(a_ref, o_ref):
+    """Factor one (bs, bs) SPD tile: o = L with A = L L^T (lower)."""
+    a = a_ref[...]
+    n = a.shape[0]
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+
+    def body(j, a):
+        d = jnp.sqrt(a[j, j])
+        colj = a[:, j] / d
+        rowpos = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+        colj = jnp.where(rowpos > j, colj, 0.0).at[j].set(d)
+        a = jnp.where((cidx == j) & (ridx >= j), colj[:, None], a)
+        # rank-1 trailing update over the strictly-below-j square
+        below = jnp.where(rowpos > j, colj, 0.0)
+        return a - below[:, None] * below[None, :]
+
+    a = jax.lax.fori_loop(0, n, body, a)
+    o_ref[...] = jnp.where(ridx >= cidx, a, 0.0)
+
+
+def chol_block(a: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Cholesky of a single (bs, bs) tile held in VMEM."""
+    bs = a.shape[0]
+    return pl.pallas_call(
+        _chol_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), a.dtype),
+        in_specs=[pl.BlockSpec((bs, bs), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((bs, bs), lambda: (0, 0)),
+        interpret=interpret,
+    )(a)
+
+
+# ---------------------------------------------------------------------------
+# Tile TRSMs (rows of the right-hand side are gridded; L stays resident)
+# ---------------------------------------------------------------------------
+
+
+def _trsm_lower_t_kernel(a_ref, l_ref, x_ref):
+    """Solve X L^T = A for one (bm, bs) row block: forward over columns."""
+    a = a_ref[...]
+    L = l_ref[...]
+    n = L.shape[0]
+
+    def body(j, x):
+        # dot over columns k < j: x[:, k] holds finals, others are zero
+        dot = x @ L[j, :]
+        val = (a[:, j] - dot) / L[j, j]
+        return x.at[:, j].set(val)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+    x_ref[...] = x
+
+
+def _trsm_lower_kernel(d_ref, l_ref, x_ref):
+    """Solve X L = D for one (bm, bs) row block: backward over columns."""
+    d = d_ref[...]
+    L = l_ref[...]
+    n = L.shape[0]
+
+    def body(t, x):
+        j = n - 1 - t
+        dot = x @ L[:, j]  # only columns k > j of x are non-zero
+        val = (d[:, j] - dot) / L[j, j]
+        return x.at[:, j].set(val)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(d))
+    x_ref[...] = x
+
+
+def _trsm_call(kernel, rhs: jax.Array, L: jax.Array, block_m: int, interpret: bool):
+    m, n = rhs.shape
+    assert m % block_m == 0, (m, block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        out_shape=jax.ShapeDtypeStruct((m, n), rhs.dtype),
+        in_specs=[
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(rhs, L)
+
+
+def trsm_lower_t(a: jax.Array, L: jax.Array, *, block_m: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """X L^T = a;  a: (m, bs), L: (bs, bs) lower-triangular."""
+    return _trsm_call(_trsm_lower_t_kernel, a, L, block_m, interpret)
+
+
+def trsm_lower(d: jax.Array, L: jax.Array, *, block_m: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """X L = d;  d: (m, bs), L: (bs, bs) lower-triangular."""
+    return _trsm_call(_trsm_lower_kernel, d, L, block_m, interpret)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused DPRR accumulation (paper Eq. 27-28).
+
+Computes, for one sample, the augmented dot-product reservoir representation
+
+    ACC = sum_k  x(k) . [x(k-1), 1]^T        in one (pad, pad) MXU tile,
+
+fusing (i) the k-1 shift (carried across T-blocks in a VMEM scratch row -
+no shifted copy of X is ever materialized in HBM), (ii) the ones-column
+append, and (iii) the valid-length row masking, with the T-blocked matmul
+accumulation.  The FPGA implementation computes these sums element-wise;
+the MXU does a (Nblk x Tb) @ (Tb x Nblk) per grid step instead.
+
+Grid: (T // block_t,) sequential; the accumulator tile and the carry row
+live in VMEM scratch across grid steps (TPU grids execute in order on a
+core).  The time-padded tail and the node padding are masked inside the
+kernel, so callers only pad with *any* values.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dprr_kernel(
+    len_ref,    # scalar prefetch: (1,) int32 valid length
+    x_ref,      # (block_t, n_pad) f32 states block
+    acc_out,    # (n_pad, n_pad) f32 output tile
+    acc,        # VMEM scratch (n_pad, n_pad) accumulator
+    carry,      # VMEM scratch (1, n_pad): last row of the previous block
+    *,
+    n_nodes: int,
+    block_t: int,
+):
+    t = pl.program_id(0)
+    n_pad = acc.shape[0]
+
+    @pl.when(t == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        carry[...] = jnp.zeros_like(carry)  # x(0) = 0 (paper Sec. 2.2)
+
+    x1 = x_ref[...]  # rows are x(k), k = t*block_t .. t*block_t+block_t-1
+
+    # shifted stream x(k-1): previous block's last row, then our rows 0..Tb-2
+    prev_last = carry[...]
+    x0 = jnp.concatenate([prev_last, x1[:-1, :]], axis=0)
+
+    # append the ones column at node index n_nodes (padding cols stay 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_t, n_pad), 1)
+    x0_aug = jnp.where(col < n_nodes, x0, jnp.where(col == n_nodes, 1.0, 0.0))
+
+    # valid-length row mask on the x(k) side kills padded contributions of
+    # BOTH the outer-product block and the ones (row-sum) column
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_t, n_pad), 0) + t * block_t
+    x1_masked = jnp.where(row < len_ref[0], x1, 0.0)
+    # node padding on the x(k) side
+    x1_masked = jnp.where(col < n_nodes, x1_masked, 0.0)
+
+    acc[...] += jax.lax.dot_general(
+        x1_masked, x0_aug,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract over time
+        preferred_element_type=jnp.float32,
+    )
+    carry[...] = x1[-1:, :]
+
+    @pl.when(t == pl.num_programs(0) - 1)
+    def _flush():
+        acc_out[...] = acc[...]
+
+
+def dprr_pallas(
+    x: jax.Array,
+    length: jax.Array,
+    n_nodes: int,
+    *,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """One sample: x (T_pad, n_pad) f32, length scalar int32.
+
+    n_pad must be a multiple of 128 (lane width) and > n_nodes.
+    Returns the (n_pad, n_pad) accumulator tile; rows/cols beyond
+    (n_nodes, n_nodes+1) are zero.
+    """
+    t_pad, n_pad = x.shape
+    assert t_pad % block_t == 0, (t_pad, block_t)
+    assert n_pad % 128 == 0 and n_nodes < n_pad
+
+    kernel = functools.partial(_dprr_kernel, n_nodes=n_nodes, block_t=block_t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t_pad // block_t,),
+        in_specs=[pl.BlockSpec((block_t, n_pad), lambda t, len_ref: (t, 0))],
+        out_specs=pl.BlockSpec((n_pad, n_pad), lambda t, len_ref: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_pad, n_pad), jnp.float32),
+            pltpu.VMEM((1, n_pad), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(length.reshape(1), x)

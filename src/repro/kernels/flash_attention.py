@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: flash attention (online softmax, causal + window, GQA).
+
+Grid (B, H, NQ, NK): the KV-block axis is minor (sequential on a TPU core),
+so the softmax statistics (m, l) and the output accumulator live in VMEM
+scratch across KV blocks; scores never touch HBM.  HBM traffic is exactly
+q + k + v reads and one out write - this is the kernel the roofline memory
+term models via the 'flashattn_vmem' scope (see launch/hlo_cost.py).
+
+Causal/window masking is applied at tile granularity; fully-masked KV tiles
+are skipped via pl.when on the block indices (halves the causal FLOPs vs
+the XLA fallback, which must mask a dense product).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+FLASH_SCOPE = "flashattn_vmem"
+
+
+def _flash_kernel(
+    q_ref,    # (1, 1, bq, D)
+    k_ref,    # (1, 1, bk, D)
+    v_ref,    # (1, 1, bk, D)
+    o_ref,    # (1, 1, bq, D)
+    m_scr,    # VMEM (bq, 1)
+    l_scr,    # VMEM (bq, 1)
+    acc_scr,  # VMEM (bq, D)
+    *,
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_k: int,
+    window: int,
+    causal: bool,
+    scale: float,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # tile-level skip: causal tiles entirely above the diagonal, or entirely
+    # outside the window, contribute nothing
+    first_q = iq * block_q
+    last_q = first_q + block_q - 1
+    first_k = ik * block_k
+    last_k = first_k + block_k - 1
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, first_k <= last_q)
+    if window > 0:
+        live = jnp.logical_and(live, last_k > first_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # (B, H, Tq, D)
+    k: jax.Array,   # (B, KV, Tk, D)
+    v: jax.Array,   # (B, KV, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+    softmax_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, tq, d = q.shape
+    _, kv, tk, _ = k.shape
+    g = h // kv
+    scale = softmax_scale if softmax_scale is not None else d**-0.5
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    pq = (-tq) % block_q
+    pk = (-tk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (tq + pq) // block_q
+    nk = (tk + pk) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_q=tq, seq_k=tk,
+        window=window, causal=causal, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :tq, :]

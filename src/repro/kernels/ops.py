@@ -1,0 +1,179 @@
+"""Public jit'd wrappers around the Pallas kernels, with dispatch.
+
+Backend selection per call:
+  * ``backend='tpu'``       - compile the Pallas kernel for TPU (production).
+  * ``backend='interpret'`` - run the kernel body in Python on CPU (tests).
+  * ``backend='xla'``       - pure-jnp fallback (this container's default;
+                              identical math via repro.kernels.ref).
+  * ``backend=None``        - auto: 'tpu' on TPU hosts else 'xla'.
+
+All wrappers own the padding/layout contracts documented on the kernels, so
+callers deal only in logical shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reservoir as core_res
+from repro.kernels import ref as kref
+from repro.kernels.dprr import dprr_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.reservoir import reservoir_pallas
+from repro.kernels.ridge_solve import ridge_solve_blocked, cholesky_blocked
+
+
+def _auto_backend(backend: Optional[str]) -> str:
+    if backend is not None:
+        return backend
+    return "tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# DPRR features
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "block_t", "backend"))
+def dprr_features(
+    x: jax.Array,          # (B, T, Nx) reservoir states
+    lengths: jax.Array,    # (B,) int32
+    n_nodes: int,
+    *,
+    block_t: int = 256,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Batched DPRR r vectors: (B, Nx*(Nx+1)), kernel-accelerated."""
+    backend = _auto_backend(backend)
+    b, t, nx = x.shape
+    assert nx == n_nodes
+    n_pad = max(128, -(-nx // 128) * 128)
+    xp = _pad_to(_pad_to(x, 2, n_pad), 1, block_t)
+
+    if backend == "xla":
+        acc = jax.vmap(lambda xi, li: kref.dprr_ref(xi, li, n_nodes))(
+            xp, lengths
+        )
+    else:
+        interp = backend == "interpret"
+        acc = jax.vmap(
+            lambda xi, li: dprr_pallas(
+                xi, li, n_nodes, block_t=block_t, interpret=interp
+            )
+        )(xp, lengths.astype(jnp.int32))
+    outer = acc[:, :n_nodes, :n_nodes].reshape(b, n_nodes * n_nodes)
+    sums = acc[:, :n_nodes, n_nodes]
+    return jnp.concatenate([outer, sums], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Reservoir states
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "f", "block_b", "chunk_t", "backend")
+)
+def reservoir_states(
+    j_seq: jax.Array,      # (B, T, Nx) masked inputs
+    lengths: jax.Array,    # (B,)
+    p: jax.Array,
+    q: jax.Array,
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    block_b: int = 8,
+    chunk_t: int = 128,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Batched reservoir states X (B, T, Nx), kernel-accelerated."""
+    backend = _auto_backend(backend)
+    b, t, nx = j_seq.shape
+    if backend == "xla":
+        return core_res.run_reservoir(p, q, j_seq, f=f, lengths=lengths)
+
+    n_pad = max(128, -(-nx // 128) * 128)
+    jp = _pad_to(_pad_to(_pad_to(j_seq, 2, n_pad), 1, chunk_t), 0, block_b)
+    bp, tp = jp.shape[0], jp.shape[1]
+    # ring-padded L/qpow: row n_pad-1 mirrors row Nx-1 so the kernel's
+    # x_prev[:, -1] reads the true last node (kernels/reservoir.py docstring)
+    Lq = core_res.ring_matrix(q, nx, jnp.float32)
+    qpow = core_res.ring_powers(q, nx, jnp.float32)
+    Lp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:nx, :nx].set(Lq)
+    Lp = Lp.at[n_pad - 1, :nx].set(Lq[nx - 1])
+    qp = jnp.zeros((n_pad,), jnp.float32).at[:nx].set(qpow)
+    qp = qp.at[n_pad - 1].set(qpow[nx - 1])
+    x0 = jnp.zeros((bp, n_pad), jnp.float32)
+    lens = _pad_to(lengths.astype(jnp.int32), 0, block_b)
+    xs = reservoir_pallas(
+        jp, x0, Lp, qp, lens, p, q,
+        f=f, block_b=block_b, chunk_t=chunk_t,
+        interpret=(backend == "interpret"),
+    )
+    return xs[:b, :t, :nx]
+
+
+# ---------------------------------------------------------------------------
+# Ridge solve
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def ridge_solve(
+    A: jax.Array,
+    B: jax.Array,
+    *,
+    block: int = 256,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """W~ = A B^{-1} via blocked Cholesky + TRSMs, kernel-accelerated."""
+    backend = _auto_backend(backend)
+    if backend == "xla":
+        return kref.ridge_solve_ref(A, B)
+    return ridge_solve_blocked(A, B, block=block, interpret=(backend == "interpret"))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "backend"),
+)
+def flash_attention(
+    q: jax.Array,   # (B, H, Tq, D)
+    k: jax.Array,   # (B, KV, Tk, D)
+    v: jax.Array,   # (B, KV, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    backend = _auto_backend(backend)
+    if backend == "xla":
+        return kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=(backend == "interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def cholesky(
+    B: jax.Array, *, block: int = 256, backend: Optional[str] = None
+) -> jax.Array:
+    backend = _auto_backend(backend)
+    if backend == "xla":
+        return kref.chol_ref(B)
+    return cholesky_blocked(B, block=block, interpret=(backend == "interpret"))

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function mirrors one kernel's contract exactly (same padding, same
+masking semantics) using only jax.numpy - no Pallas, no loops over scalars.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dprr as core_dprr
+from repro.core import reservoir as core_res
+
+
+def dprr_ref(x: jax.Array, length: jax.Array, n_nodes: int) -> jax.Array:
+    """Oracle of kernels.dprr.dprr_pallas: (T_pad, n_pad) -> (n_pad, n_pad)."""
+    t_pad, n_pad = x.shape
+    row = jnp.arange(t_pad)[:, None]
+    col = jnp.arange(n_pad)[None, :]
+    x1 = jnp.where((row < length) & (col < n_nodes), x, 0.0)
+    x0 = jnp.pad(x, ((1, 0), (0, 0)))[:-1]
+    x0_aug = jnp.where(col < n_nodes, x0, jnp.where(col == n_nodes, 1.0, 0.0))
+    return x1.T @ x0_aug
+
+
+def chol_ref(a: jax.Array) -> jax.Array:
+    """Oracle of kernels.cholesky.chol_block."""
+    return jnp.linalg.cholesky(a)
+
+
+def trsm_lower_t_ref(a: jax.Array, L: jax.Array) -> jax.Array:
+    """Oracle of kernels.cholesky.trsm_lower_t: X L^T = a."""
+    return jax.scipy.linalg.solve_triangular(L, a.T, lower=True).T
+
+
+def trsm_lower_ref(d: jax.Array, L: jax.Array) -> jax.Array:
+    """Oracle of kernels.cholesky.trsm_lower: X L = d."""
+    return jax.scipy.linalg.solve_triangular(L.T, d.T, lower=False).T
+
+
+def ridge_solve_ref(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Oracle of kernels.ridge_solve.ridge_solve_blocked: A B^{-1}."""
+    C = jnp.linalg.cholesky(B)
+    D = jax.scipy.linalg.solve_triangular(C, A.T, lower=True)
+    return jax.scipy.linalg.solve_triangular(C.T, D, lower=False).T
+
+
+def flash_attention_ref(
+    q: jax.Array,   # (B, H, Tq, D)
+    k: jax.Array,   # (B, KV, Tk, D)
+    v: jax.Array,   # (B, KV, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle of kernels.flash_attention (dense masked softmax)."""
+    b, h, tq, d = q.shape
+    _, kv, tk, _ = k.shape
+    g = h // kv
+    scale = softmax_scale if softmax_scale is not None else d**-0.5
+    qg = q.reshape(b, kv, g, tq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(tq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, tq, d).astype(q.dtype)
+
+
+def reservoir_ref(
+    j_seq: jax.Array,      # (B, T_pad, n_pad)
+    x0: jax.Array,         # (B, n_pad)
+    lengths: jax.Array,    # (B,)
+    p: jax.Array,
+    q: jax.Array,
+    n_nodes: int,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+) -> jax.Array:
+    """Oracle of kernels.reservoir.reservoir_pallas (true-node lanes only).
+
+    Runs the core scan on the unpadded node slice and re-pads with zeros
+    (+ the replicated ring lane, see kernels.reservoir docstring).
+    """
+    n_pad = j_seq.shape[-1]
+    x = core_res.run_reservoir(
+        p, q, j_seq[..., :n_nodes], x0[..., :n_nodes], f=f, lengths=lengths
+    )
+    out = jnp.pad(x, ((0, 0), (0, 0), (0, n_pad - n_nodes)))
+    # replicate the ring lane as the kernel does
+    return out.at[..., -1].set(x[..., n_nodes - 1])

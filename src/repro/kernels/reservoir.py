@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused modular-DFR reservoir chunk (paper Eq. 14).
+
+Per time step the modular DFR computes, batched over samples,
+
+    a(k) = p * f(j(k) + x(k-1))                 # VPU elementwise
+    x(k) = a(k) @ L(q)^T + x(k-1)_{Nx} * qpow   # (B, Nx) @ (Nx, Nx) MXU
+
+where L(q)/qpow encode the ring recurrence in closed form (see
+repro.core.reservoir).  The kernel runs a whole chunk of time steps with the
+state resident in VMEM scratch - the TPU analogue of the FPGA's pipelined
+node loop: HBM traffic is one read of J and one write of X per step, the
+recurrent state never leaves VMEM.
+
+Grid: (batch_blocks, time_chunks); time is the minor (sequential) dimension
+so the state scratch carries across chunks, re-initialized at chunk 0 of
+every batch block.  Per-sample valid lengths freeze the state (matching
+``run_reservoir(lengths=...)``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _reservoir_kernel(
+    j_ref,       # (chunk_t, block_b, n_pad) masked inputs
+    x0_ref,      # (block_b, n_pad) initial state
+    L_ref,       # (n_pad, n_pad) ring matrix (zero-padded)
+    qpow_ref,    # (1, n_pad) ring powers
+    len_ref,     # (block_b, 1) int32 valid lengths
+    pq_ref,      # (1, 2) f32: [p, q] (q unused here; folded into L)
+    out_ref,     # (chunk_t, block_b, n_pad) states
+    state,       # VMEM scratch (block_b, n_pad)
+    *,
+    f: Callable[[jax.Array], jax.Array],
+    chunk_t: int,
+):
+    tc = pl.program_id(1)
+
+    @pl.when(tc == 0)
+    def _init():
+        state[...] = x0_ref[...]
+
+    p = pq_ref[0, 0]
+    Lt = L_ref[...].T
+    qpow = qpow_ref[...]
+    lens = len_ref[...]  # (block_b, 1)
+
+    def step(t, _):
+        x_prev = state[...]
+        j_k = j_ref[t, :, :]
+        a = p * f(j_k + x_prev)
+        ring_in = x_prev[:, -1:]
+        x_k = jax.lax.dot(a, Lt, preferred_element_type=jnp.float32) + ring_in * qpow
+        k_global = tc * chunk_t + t
+        live = k_global < lens
+        x_k = jnp.where(live, x_k, x_prev)
+        state[...] = x_k
+        out_ref[t, :, :] = x_k
+        return 0
+
+    jax.lax.fori_loop(0, chunk_t, step, 0)
+
+
+def reservoir_pallas(
+    j_seq: jax.Array,     # (B, T_pad, n_pad) f32; node padding must be zero
+    x0: jax.Array,        # (B, n_pad)
+    L: jax.Array,         # (n_pad, n_pad) ring matrix, zero padded
+    qpow: jax.Array,      # (n_pad,)
+    lengths: jax.Array,   # (B,) int32
+    p: jax.Array,         # scalar
+    q: jax.Array,         # scalar
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    block_b: int = 8,
+    chunk_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns states X (B, T_pad, n_pad).
+
+    NOTE on ring padding: L/qpow must be built for the *padded* node count
+    with q-powers beyond Nx set to zero (ops.py does this), so the ring wrap
+    reads the true node Nx-1, not padding.  The kernel itself reads
+    x_prev[:, -1:]; ops.py therefore keeps the true last node replicated
+    into the last padded lane (see ``ops.reservoir_states``).
+    """
+    b, t_pad, n_pad = j_seq.shape
+    assert t_pad % chunk_t == 0 and b % block_b == 0
+    jt = jnp.swapaxes(j_seq, 0, 1)  # (T, B, N): time-major for the grid
+
+    kernel = functools.partial(_reservoir_kernel, f=f, chunk_t=chunk_t)
+    pq = jnp.stack([p.astype(jnp.float32), q.astype(jnp.float32)]).reshape(1, 2)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b // block_b, t_pad // chunk_t),
+        out_shape=jax.ShapeDtypeStruct((t_pad, b, n_pad), jnp.float32),
+        in_specs=[
+            pl.BlockSpec((chunk_t, block_b, n_pad), lambda bb, tc: (tc, bb, 0)),
+            pl.BlockSpec((block_b, n_pad), lambda bb, tc: (bb, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda bb, tc: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda bb, tc: (0, 0)),
+            pl.BlockSpec((block_b, 1), lambda bb, tc: (bb, 0)),
+            pl.BlockSpec((1, 2), lambda bb, tc: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk_t, block_b, n_pad), lambda bb, tc: (tc, bb, 0)),
+        scratch_shapes=[pltpu.VMEM((block_b, n_pad), jnp.float32)],
+        interpret=interpret,
+    )(jt, x0, L, qpow.reshape(1, -1), lengths.reshape(-1, 1), pq)
+    return jnp.swapaxes(out, 0, 1)

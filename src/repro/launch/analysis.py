@@ -1,0 +1,131 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources:
+  * compiled.cost_analysis()  -> HLO flops / bytes accessed (per device for
+    SPMD-partitioned modules - verified in tests/test_dryrun_small.py)
+  * HLO text                  -> per-collective wire-byte estimates
+
+Hardware constants: TPU v5e (target platform).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# --- TPU v5e constants (per chip) -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (assume one active link/collective)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# e.g.  %ag = bf16[2,4096,5120]{2,1,0} all-gather(...), replica_groups=...
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float                   # estimated per-chip wire traffic
+    op_bytes: Dict[str, float]          # raw result bytes per op kind
+    op_counts: Dict[str, int]
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str, default_group: int = 16) -> CollectiveStats:
+    """Scan (possibly very large) HLO text line-by-line, summing collective
+    wire bytes with ring-model formulas:
+
+        all-reduce:          2 * B * (k-1)/k
+        all-gather:          B * (k-1)/k          (B = result bytes)
+        reduce-scatter:      B * (k-1)            (operand = k * result)
+        all-to-all:          B * (k-1)/k
+        collective-permute:  B
+    """
+    wire = 0.0
+    op_bytes: Dict[str, float] = {}
+    op_counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(dtype, dims)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            k = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            k = len(gb.group(1).split(",")) if gb else default_group
+        k = max(k, 2)
+        if kind == "all-reduce":
+            w = 2.0 * b * (k - 1) / k
+        elif kind == "all-gather":
+            w = b * (k - 1) / k
+        elif kind == "reduce-scatter":
+            w = b * (k - 1)
+        elif kind == "all-to-all":
+            w = b * (k - 1) / k
+        else:  # collective-permute
+            w = b
+        wire += w
+        op_bytes[kind] = op_bytes.get(kind, 0.0) + b
+        op_counts[kind] = op_counts.get(kind, 0) + 1
+    return CollectiveStats(wire_bytes=wire, op_bytes=op_bytes, op_counts=op_counts)
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    wire_bytes_per_device: float,
+) -> Dict[str, float]:
+    compute_s = flops_per_device / PEAK_FLOPS_BF16
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = wire_bytes_per_device / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": compute_s / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """6 N D (dense) / 6 N_active D (MoE); decode counts one token/row."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: fwd only, 1 token per row

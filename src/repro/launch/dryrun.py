@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+#
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  For each cell this driver:
+
+#     1. builds the sharded step program (launch/steps.py),
+#     2. .lower().compile() on the production mesh,
+#     3. records memory_analysis(), cost_analysis() and the collective wire
+#        bytes parsed from the optimized HLO,
+#     4. writes one JSON artifact under artifacts/dryrun/.
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+#         --shape train_4k --mesh single           # one cell
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both   # sweep
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.launch import analysis
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell, pick_optimizer
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: dict | None = None, tag: str = "baseline",
+             overrides: dict | None = None,
+             accum_override: int | None = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "tag": tag,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "optimizer": pick_optimizer(cfg) if shape.kind == "train" else None,
+    }
+    if shape_name in cfg.skip_shapes:
+        record["status"] = "skipped"
+        record["reason"] = (
+            "full-attention architecture at 524k context (sub-quadratic "
+            "required); see DESIGN.md Arch-applicability"
+        )
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape, mesh, rules=rules,
+                          accum_override=accum_override)
+        lowered = lower_cell(cell, mesh, rules=rules)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from repro.kernels.flash_attention import FLASH_SCOPE
+        walk = hlo_cost.analyze(hlo, vmem_scopes=(FLASH_SCOPE,))
+        del hlo
+        flops = walk.flops
+        bytes_acc = walk.mem_bytes
+
+        # grad-accumulation correction is NOT needed: the accumulation scan
+        # is a while loop with known_trip_count, already multiplied in.
+        terms = analysis.roofline_terms(flops, bytes_acc, walk.wire_bytes)
+        mflops = analysis.model_flops(cfg, shape)
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            chips=n_chips,
+            flops_per_device=flops,
+            bytes_per_device=bytes_acc,
+            collective={
+                "wire_bytes": walk.wire_bytes,
+                "op_bytes": walk.coll_bytes,
+                "op_counts": walk.coll_counts,
+                "n_while_unknown_trip": walk.n_while_unknown,
+            },
+            cost_analysis_raw={
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            memory={
+                "argument_size": getattr(mem, "argument_size_in_bytes", None),
+                "output_size": getattr(mem, "output_size_in_bytes", None),
+                "temp_size": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            roofline=terms,
+            model_flops_total=mflops,
+            model_flops_per_device=mflops / n_chips,
+            useful_flops_ratio=(mflops / n_chips) / flops if flops else None,
+        )
+    except Exception as ex:  # noqa: BLE001 - record the failure, keep sweeping
+        record.update(
+            status="error",
+            error=f"{type(ex).__name__}: {ex}",
+            trace=traceback.format_exc()[-4000:],
+        )
+    return record
+
+
+def artifact_path(arch: str, shape_name: str, mesh_name: str, tag: str) -> pathlib.Path:
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    return ART_DIR / f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. attn_impl=pallas)")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="grad-accumulation override for train cells")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    archs = ALL_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                path = artifact_path(arch, shape_name, mesh_name, args.tag)
+                if args.skip_existing and path.exists():
+                    print(f"[skip-existing] {path.name}")
+                    continue
+                rec = run_cell(arch, shape_name, multi, tag=args.tag,
+                               overrides=overrides or None,
+                               accum_override=args.accum)
+                rec["overrides"] = dict(overrides, accum=args.accum)
+                path.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f" compile={rec['compile_s']}s dom={r['dominant']}"
+                        f" frac={r['roofline_fraction']:.3f}"
+                    )
+                    print(compiled_summary(rec))
+                elif status == "error":
+                    failures += 1
+                    extra = " " + rec["error"][:160]
+                print(f"[{status}] {arch} x {shape_name} x {mesh_name}{extra}",
+                      flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+def compiled_summary(rec: dict) -> str:
+    mem = rec.get("memory", {})
+    return (
+        f"    mem/device: args={_gb(mem.get('argument_size'))} "
+        f"temp={_gb(mem.get('temp_size'))} out={_gb(mem.get('output_size'))} | "
+        f"flops/dev={rec['flops_per_device']:.3e} "
+        f"bytes/dev={rec['bytes_per_device']:.3e} "
+        f"wire/dev={rec['collective']['wire_bytes']:.3e}"
+    )
+
+
+def _gb(v):
+    return f"{v/2**30:.2f}GiB" if v else "?"
+
+
+if __name__ == "__main__":
+    main()

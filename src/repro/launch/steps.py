@@ -1,0 +1,149 @@
+"""Step-function assembly shared by dryrun.py / train.py / serve.py:
+builds the jitted, fully-sharded train/prefill/decode programs for one
+(arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, input_specs
+from repro.distributed import sharding as shd
+from repro.models.lm import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.transformer import Transformer
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedule import cosine_schedule
+
+
+def pick_optimizer(cfg: ArchConfig) -> str:
+    """Adafactor for 50B+ params (factored state is what fits HBM)."""
+    return "adafactor" if cfg.param_count() > 5e10 else "adamw"
+
+
+def _batch_axes(batch_specs: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, tuple]:
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def _opt_axes(opt_state, params_shapes, params_axes):
+    """Optimizer-state logical axes: inherit the parameter's axes where the
+    shapes match (mu/nu), drop factored dims (adafactor row/col)."""
+    pflat, ptree = jax.tree_util.tree_flatten(params_shapes)
+    aflat = ptree.flatten_up_to(params_axes)
+    shape_to_axes = {}
+    for ps, ax in zip(pflat, aflat):
+        shape_to_axes.setdefault(tuple(ps.shape), tuple(ax))
+
+    by_row = {}
+    by_col = {}
+    for ps, ax in zip(pflat, aflat):
+        s = tuple(ps.shape)
+        if len(s) >= 2:
+            by_row.setdefault(s[:-1], tuple(ax[:-1]))
+            by_col.setdefault(s[:-2] + s[-1:], tuple(ax[:-2] + ax[-1:]))
+
+    def axes_of(leaf):
+        s = tuple(leaf.shape)
+        if s in shape_to_axes:
+            return shape_to_axes[s]
+        if s in by_row:
+            return by_row[s]
+        if s in by_col:
+            return by_col[s]
+        return (None,) * len(s)
+
+    return jax.tree_util.tree_map(axes_of, opt_state)
+
+
+@dataclasses.dataclass
+class CellPrograms:
+    """Everything needed to lower one (arch x shape) cell on a mesh."""
+
+    kind: str
+    fn: Any                  # the step callable
+    args: Tuple              # ShapeDtypeStruct pytrees (lower(*args))
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+
+
+def build_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    *,
+    rules: Optional[dict] = None,
+    accum_override: Optional[int] = None,
+) -> CellPrograms:
+    model = Transformer(cfg)
+    rules = rules or dict(shd.DEFAULT_RULES)
+
+    with shd.use_mesh(mesh, rules):
+        params_shapes = model.param_shapes()
+        params_axes = model.axes()
+        p_shard = shd.guarded_shardings(params_shapes, params_axes, mesh, rules)
+        batch_specs = input_specs(cfg, shape)
+        b_shard = shd.guarded_shardings(batch_specs, _batch_axes(batch_specs),
+                                        mesh, rules)
+        repl = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            # decoder-only token models learn next-token on the same stream;
+            # embed-stub models get target tokens alongside
+            opt = make_optimizer(pick_optimizer(cfg))
+            accum = accum_override or cfg.grad_accum.get(shape.name, 1)
+            lr_fn = cosine_schedule(3e-4, 100, 10000)
+            step_fn = make_train_step(model, opt, lr_fn, accum=accum)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            opt_axes = _opt_axes(opt_shapes, params_shapes, params_axes)
+            o_shard = shd.guarded_shardings(opt_shapes, opt_axes, mesh, rules)
+            args = (params_shapes, opt_shapes,
+                    jax.ShapeDtypeStruct((), jnp.int32), batch_specs)
+            in_sh = (p_shard, o_shard, repl, b_shard)
+            out_sh = (p_shard, o_shard, None)
+            return CellPrograms("train", step_fn, args, in_sh, out_sh, (0, 1))
+
+        if shape.kind == "prefill":
+            fn = make_prefill_step(model)
+            args = (params_shapes, batch_specs)
+            return CellPrograms("prefill", fn, args, (p_shard, b_shard), None, ())
+
+        # decode: one token against a seq_len cache
+        fn = make_decode_step(model)
+        enc_len = shape.seq_len if cfg.is_encdec else 0
+        cache_shapes = model.cache_specs(shape.global_batch, shape.seq_len,
+                                         enc_len=enc_len)
+        cache_axes = model.cache_axes(shape.global_batch, shape.seq_len,
+                                      enc_len=enc_len)
+        c_shard = shd.guarded_shardings(cache_shapes, cache_axes, mesh, rules)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_shard = shd.guarded_shardings(
+            {"t": tok}, {"t": ("batch", None)}, mesh, rules
+        )["t"]
+        args = (params_shapes, tok, cache_shapes)
+        out_sh = (None, c_shard)
+        return CellPrograms("decode", fn, args, (p_shard, tok_shard, c_shard),
+                            out_sh, (2,))
+
+
+def lower_cell(cell: CellPrograms, mesh: Mesh, rules: Optional[dict] = None):
+    """jit + lower one cell under the mesh context (no compile)."""
+    rules = rules or dict(shd.DEFAULT_RULES)
+    with shd.use_mesh(mesh, rules):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate,
+        )
+        return jitted.lower(*cell.args)

@@ -1,0 +1,255 @@
+"""Attention: GQA with blockwise online-softmax (flash-style in XLA),
+sliding windows (gemma3's local:global schedule), cross-attention, and a
+KV-cache decode path.
+
+The training/prefill path never materializes the (T, T) score matrix: a scan
+over query chunks with an inner scan over KV chunks keeps the live working
+set at (block_q, block_k) per head - the memory-roofline behaviour a Pallas
+flash kernel would have, expressed so XLA can fuse it (this container cannot
+run TPU Pallas, see DESIGN.md).
+
+Layout: q (B, T, H, D), k/v (B, S, KV, D) with H = G * KV (GQA groups).
+Softmax statistics are f32; matmuls accumulate f32 via
+preferred_element_type.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _chunk(x: Array, axis: int, size: int) -> Array:
+    n = x.shape[axis]
+    assert n % size == 0, (n, size)
+    shape = list(x.shape)
+    shape[axis : axis + 1] = [n // size, size]
+    return x.reshape(shape)
+
+
+def blockwise_attention(
+    q: Array,                 # (B, Tq, H, D)
+    k: Array,                 # (B, Tk, KV, D)
+    v: Array,                 # (B, Tk, KV, D)
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = global; w > 0 = only attend to last w keys
+    q_offset: int = 0,        # absolute position of q[0] (for prefill chunks)
+    block_q: int = 512,
+    block_k: int = 1024,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """Online-softmax attention over KV chunks; O(Tq*D + bq*bk) live memory."""
+    b, tq, h, d = q.shape
+    _, tk, kv, _ = k.shape
+    assert h % kv == 0
+    g = h // kv
+    scale = softmax_scale if softmax_scale is not None else d**-0.5
+
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    # pad to block multiples (masked out below)
+    pq = (-tq) % block_q
+    pk = (-tk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    tqp, tkp = tq + pq, tk + pk
+
+    # (nq, B, bq, KV, G, D) query chunks; keys (nk, B, bk, KV, D)
+    qc = jnp.moveaxis(_chunk(q.reshape(b, tqp, kv, g, d), 1, block_q), 1, 0)
+    kc = jnp.moveaxis(_chunk(k, 1, block_k), 1, 0)
+    vc = jnp.moveaxis(_chunk(v, 1, block_k), 1, 0)
+
+    q_pos_in = jnp.arange(block_q)
+    k_pos_in = jnp.arange(block_k)
+
+    def q_step(_, qi_pack):
+        qi, iq = qi_pack  # qi: (B, bq, KV, G, D)
+        q_pos = q_offset + iq * block_q + q_pos_in  # (bq,)
+
+        def kv_step(carry, kj_pack):
+            acc, m, l = carry
+            kj, vj, jk = kj_pack
+            k_pos = jk * block_k + k_pos_in  # (bk,)
+            # scores (B, KV, G, bq, bk), f32
+            s = jax.lax.dot_general(
+                qi.astype(jnp.float32),
+                kj.astype(jnp.float32),
+                dimension_numbers=((((4,), (3,))), (((0, 2), (0, 2)))),
+                preferred_element_type=jnp.float32,
+            )  # (B, KV, bq, G, bk) -> fix ordering below
+            # dims: batch (B, KV), contracting D: result (B, KV, bq, G, bk)
+            s = s * scale
+            mask = (k_pos[None, :] <= q_pos[:, None]) if causal else jnp.ones(
+                (block_q, block_k), bool
+            )
+            # window may be a traced per-layer scalar; <= 0 means global
+            w_eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), tkp + tqp)
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - w_eff)
+            mask = mask & (k_pos[None, :] < tk)  # kv padding
+            s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))  # (B, KV, bq, G)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # p @ v: (B, KV, bq, G, bk) x (B, bk, KV, D) -> (B, KV, bq, G, D)
+            pv = jax.lax.dot_general(
+                p,
+                vj.astype(jnp.float32),
+                dimension_numbers=(((4,), (1,)), ((0, 1), (0, 2))),
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv, block_q, g, d), jnp.float32)
+        m0 = jnp.full((b, kv, block_q, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, block_q, g), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kc, vc, jnp.arange(kc.shape[0])),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, KV, bq, G, D)
+        return None, out
+
+    iq = jnp.arange(qc.shape[0])
+    # reorder qc to (nq, B, bq, KV, G, D) -> kernel wants (B, bq, KV, G, D)
+    _, outs = jax.lax.scan(q_step, None, (qc, iq))
+    # outs: (nq, B, KV, bq, G, D) -> (B, T, KV*G, D)
+    outs = jnp.moveaxis(outs, 0, 1)  # (B, nq, KV, bq, G, D)
+    outs = jnp.moveaxis(outs, 3, 2)  # (B, nq, bq, KV, G, D)
+    outs = outs.reshape(b, tqp, kv * g, d)
+    return outs[:, :tq].astype(q.dtype)
+
+
+def make_flash_scoped(causal: bool, block_q: int, block_k: int,
+                      use_kernel: bool = False):
+    """Flash attention with VMEM-scoped fwd AND bwd.
+
+    The backward pass is the standard flash-attention backward: recompute
+    scores blockwise from (q, k, v) - one extra forward's FLOPs, interior
+    traffic VMEM-resident.  Expressed as a custom_vjp whose fwd and bwd both
+    run inside the ``flashattn_vmem`` named scope, so the roofline walker
+    models both directions as kernels (on TPU the fwd IS the Pallas kernel;
+    the bwd kernel falls back to the scoped XLA recompute path).
+    """
+    from repro.kernels.flash_attention import FLASH_SCOPE
+
+    def _fwd_math(q, k, v, window):
+        if use_kernel and jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops
+
+            out = kops.flash_attention(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                jnp.swapaxes(v, 1, 2), causal=causal, window=0,
+                block_q=block_q, block_k=block_k,
+            )
+            return jnp.swapaxes(out, 1, 2)
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k)
+
+    @jax.custom_vjp
+    def f(q, k, v, window):
+        with jax.named_scope(FLASH_SCOPE):
+            return _fwd_math(q, k, v, window)
+
+    def f_fwd(q, k, v, window):
+        with jax.named_scope(FLASH_SCOPE):
+            out = _fwd_math(q, k, v, window)
+        return out, (q, k, v, window)
+
+    def f_bwd(res, ct):
+        q, k, v, window = res
+        with jax.named_scope(FLASH_SCOPE):
+            # recompute-based flash backward: checkpoint(nothing_saveable)
+            # makes the transposed scan recompute scores PER BLOCK instead
+            # of stacking per-iteration residuals - exactly the real flash
+            # backward kernel's dataflow (and its FLOP count)
+            fn = jax.checkpoint(
+                lambda q_, k_, v_: blockwise_attention(
+                    q_, k_, v_, causal=causal, window=window,
+                    block_q=block_q, block_k=block_k,
+                ),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+            _, vjp = jax.vjp(fn, q, k, v)
+            dq, dk, dv = vjp(ct)
+        return dq, dk, dv, jnp.zeros_like(window)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def decode_attention(
+    q: Array,            # (B, 1, H, D)
+    k_cache: Array,      # (B, S, KV, D)
+    v_cache: Array,      # (B, S, KV, D)
+    cache_len: Array,    # (B,) or scalar: number of valid cache entries
+    *,
+    window: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """Single-token decode attention against a (padded) KV cache."""
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    scale = softmax_scale if softmax_scale is not None else d**-0.5
+    qg = q.reshape(b, kv, g, d)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.reshape(cache_len, (-1, 1)), (b, s))
+    w_eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), s + 1)
+    valid = valid & (pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - w_eff)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, S_max, KV, D)
+    v: Array  # (B, S_max, KV, D)
+    length: Array  # (B,) int32 valid entries
+
+    @classmethod
+    def zeros(cls, batch: int, max_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16):
+        shape = (batch, max_len, n_kv, head_dim)
+        return cls(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def append(self, k_new: Array, v_new: Array) -> "KVCache":
+        """Append T_new tokens per row.
+
+        T_new == 1 (decode): per-row write at each row's own length
+        (continuous batching - rows are at different positions).
+        T_new > 1 (chunked prefill): uniform position (length[0]).
+        """
+        if k_new.shape[1] == 1:
+            def put(buf, upd, pos):
+                return jax.lax.dynamic_update_slice(buf, upd, (pos, 0, 0))
+
+            k = jax.vmap(put)(self.k, k_new.astype(self.k.dtype), self.length)
+            v = jax.vmap(put)(self.v, v_new.astype(self.v.dtype), self.length)
+        else:
+            pos = self.length[0]
+            k = jax.lax.dynamic_update_slice(
+                self.k, k_new.astype(self.k.dtype), (0, pos, 0, 0)
+            )
+            v = jax.lax.dynamic_update_slice(
+                self.v, v_new.astype(self.v.dtype), (0, pos, 0, 0)
+            )
+        return KVCache(k=k, v=v, length=self.length + k_new.shape[1])

@@ -1,0 +1,42 @@
+"""Feed-forward blocks: SwiGLU / GeLU MLPs with TP sharding annotations."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import fsdp_gather, shard_act
+from repro.models.layers import PV, dense_init
+
+Array = jax.Array
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16, gated: bool = True) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), ("embed", "mlp"), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), ("mlp", "embed"), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), ("embed", "mlp"), dtype)
+    return p
+
+
+def mlp_apply(p: Dict, x: Array, activation: str = "silu") -> Array:
+    """x: (B, T, d_model); TP over the d_ff dimension; FSDP gathers the
+    weights at use (see sharding.fsdp_gather)."""
+    w_up = fsdp_gather(p["w_up"], ("embed", "mlp"))
+    w_down = fsdp_gather(p["w_down"], ("mlp", "embed"))
+    up = jnp.einsum("btd,df->btf", x, w_up.astype(x.dtype))
+    if "w_gate" in p:
+        w_gate = fsdp_gather(p["w_gate"], ("embed", "mlp"))
+        gate = jnp.einsum("btd,df->btf", x, w_gate.astype(x.dtype))
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) if activation == "silu" \
+            else jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype) if activation == "gelu" \
+            else jax.nn.silu(up.astype(jnp.float32)).astype(x.dtype)
+    h = shard_act(h, ("batch", None, "act_model"))
+    return jnp.einsum("btf,fd->btd", h, w_down.astype(x.dtype))

@@ -1,0 +1,158 @@
+"""Shared model layers: params-with-axes, norms, dense, embeddings, RoPE.
+
+Parameters are plain jnp arrays; every init returns a ``PV`` (param + logical
+axes) leaf.  ``split_tree`` separates values from axes so the runtime can
+derive PartitionSpecs (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PV:
+    """A parameter leaf: value + logical axes.
+
+    Registered as a pytree node (axes ride as static aux data) so PV trees
+    survive jax.eval_shape - the dry-run derives parameter shapes AND
+    logical axes without ever allocating.
+    """
+
+    value: Array
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), tuple(self.axes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], tuple(aux))
+
+
+def is_pv(x) -> bool:
+    return isinstance(x, PV)
+
+
+def split_tree(tree):
+    """Tree of PV -> (tree of arrays, tree of axes tuples)."""
+    vals = jax.tree_util.tree_map(lambda pv: pv.value, tree, is_leaf=is_pv)
+    axes = jax.tree_util.tree_map(lambda pv: pv.axes, tree, is_leaf=is_pv)
+    return vals, axes
+
+
+def dense_init(
+    key: jax.Array,
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    dtype=jnp.bfloat16,
+    scale: Optional[float] = None,
+    fan_in: Optional[int] = None,
+) -> PV:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    w = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return PV(w, axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.bfloat16) -> PV:
+    return PV(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.bfloat16) -> PV:
+    return PV(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms (f32 accumulation)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (classic + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(
+    x: Array, positions: Array, theta: float = 1e4, sections=(16, 24, 24)
+) -> Array:
+    """Multimodal RoPE (Qwen2-VL): positions (B, T, 3) = (t, h, w) ids.
+
+    The head_dim/2 frequency slots are split into ``sections`` groups, each
+    rotated by one positional stream.  For text tokens the three streams are
+    equal and M-RoPE degenerates to 1-D RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    n_half = d // 2
+    secs = jnp.asarray(sections)
+    assert int(sum(sections)) == n_half, (sections, n_half)
+    # section id of each frequency slot
+    bounds = jnp.cumsum(secs)
+    slot = jnp.arange(n_half)
+    sec_id = jnp.sum(slot[:, None] >= bounds[None, :], axis=-1)  # (D/2,) in 0..2
+    pos = positions.astype(jnp.float32)[..., sec_id]  # (B, T, D/2)
+    angles = pos * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key: jax.Array, vocab: int, d_model: int, dtype=jnp.bfloat16) -> PV:
+    w = (jax.random.normal(key, (vocab, d_model), jnp.float32) * (d_model**-0.5))
+    return PV(w.astype(dtype), ("vocab", "embed_no_shard"))
+
+
+def embed_lookup(table: Array, ids: Array) -> Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(x: Array, table: Array) -> Array:
+    """Logits in f32 (stable CE)."""
+    return jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.float32), table.astype(jnp.float32)
+    )

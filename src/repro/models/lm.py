@@ -1,0 +1,147 @@
+"""LM step functions: loss, microbatched train_step, prefill/decode serve
+steps - the units the launcher jits onto the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.transformer import Transformer
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+Array = jax.Array
+
+
+def softmax_xent(logits: Array, targets: Array) -> Array:
+    """Mean next-token CE; logits f32 (B, T, V), targets int32 (B, T).
+
+    The (B, T, V) logits are constrained vocab-sharded over 'model' so the
+    f32 CE working set is 1/TP of the naive layout (the logsumexp reduction
+    and the one-hot gather both SPMD-shard cleanly).
+    """
+    from repro.distributed.sharding import shard_act
+
+    logits = shard_act(logits, ("batch", None, "vocab"))
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    # target logit via a masked local reduction (NOT take_along_axis, which
+    # would all-gather the vocab-sharded logits)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, shifted.shape, shifted.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_ids == targets[..., None], shifted, 0.0), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def loss_fn(model: Transformer, params, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+    cfg = model.cfg
+    kwargs = {}
+    if cfg.is_encdec:
+        # stub frontend supplies encoder frame embeddings; decoder is teacher
+        # forced on the target token stream
+        kwargs = dict(tokens=batch["targets"], enc_embeds=batch["embeds"])
+    elif cfg.input_mode == "embeds":
+        kwargs = dict(embeds=batch["embeds"])
+    else:
+        kwargs = dict(tokens=batch["tokens"])
+    logits, aux = model.train_logits(params, **kwargs)
+    targets = batch["targets"]
+    # next-token objective: shift targets left for decoder-only token models
+    if not cfg.is_encdec and "tokens" in batch:
+        logits = logits[:, :-1]
+        targets = targets[:, 1:]
+    loss = softmax_xent(logits, targets)
+    metrics = {"xent": loss}
+    if aux:
+        lb = aux.get("lb_loss", 0.0)
+        zl = aux.get("z_loss", 0.0)
+        loss = loss + 0.01 * lb + 1e-3 * zl
+        metrics.update(lb_loss=lb, z_loss=zl)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    model: Transformer,
+    optimizer: Optimizer,
+    lr_fn: Callable[[Array], Array],
+    accum: int = 1,
+    grad_clip: float = 1.0,
+) -> Callable:
+    """Builds train_step(params, opt_state, step, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch is split into ``accum``
+    microbatches scanned sequentially; grads accumulate in f32 (sharded like
+    their parameters, ZeRO-style), so peak activation memory is one
+    microbatch deep.
+    """
+
+    def split_mb(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    def train_step(params, opt_state, step, batch):
+        micro = jax.tree_util.tree_map(split_mb, batch)
+
+        def one(carry, mb):
+            gsum, lsum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(model, p, mb), has_aux=True
+            )(params)
+            gsum = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads
+            )
+            return (gsum, lsum + loss), None
+
+        gzero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (gsum, lsum), _ = jax.lax.scan(
+            one, (gzero, jnp.zeros((), jnp.float32)), micro
+        )
+        grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(step)
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        metrics = {
+            "loss": lsum / accum,
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Transformer) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(model, params, batch)
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(model: Transformer) -> Callable:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.is_encdec:
+            # prefill = encode the (stub) frames; decoder starts from BOS
+            bos = jnp.zeros((batch["embeds"].shape[0], 1), jnp.int32)
+            return model.prefill(params, tokens=bos, enc_embeds=batch["embeds"])
+        if cfg.input_mode == "embeds":
+            return model.prefill(params, embeds=batch["embeds"])
+        return model.prefill(params, tokens=batch["tokens"])
+
+    return prefill_step
+
+
+def make_decode_step(model: Transformer) -> Callable:
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return decode_step

@@ -1,0 +1,131 @@
+"""Top-1 (Switch-style) Mixture of Experts with grouped einsum dispatch.
+
+TPU-native formulation (GShard/Switch lineage): tokens are grouped; dispatch
+and combine are einsums against a (G, S, E, C) one-hot tensor, so the
+expert-parallel resharding (G sharded over 'data'  ->  E sharded over
+'model') lowers to an all-to-all under XLA SPMD, and the expert FFN itself
+is a dense batched matmul on the MXU.
+
+Group sizing (auto):
+  * long sequences (T >= 1024): groups of 1024 tokens *within* a sequence -
+    groups inherit the batch's data sharding, dispatch stays local;
+  * decode / tiny batches (B*T <= 4096): one global group - the routing
+    tensors are a few MB, and capacity stays ~cf x tokens/E so expert FLOPs
+    don't balloon (slots = max(E, S*cf));
+  * otherwise: largest power-of-two divisor of T up to 2048.
+
+Capacity: C = ceil(S / E * capacity_factor); overflow tokens fall through
+the residual connection (standard Switch behaviour).  Router: f32 logits,
+switch load-balance aux loss + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.layers import PV, dense_init
+
+Array = jax.Array
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d_model, n_experts), ("embed_no_shard", None),
+                             jnp.float32, scale=d_model**-0.5),
+        "w_gate": dense_init(ks[1], (n_experts, d_model, d_ff),
+                             ("expert", "embed", "expert_mlp"), dtype),
+        "w_up": dense_init(ks[2], (n_experts, d_model, d_ff),
+                           ("expert", "embed", "expert_mlp"), dtype),
+        "w_down": dense_init(ks[3], (n_experts, d_ff, d_model),
+                             ("expert", "expert_mlp", "embed"), dtype),
+    }
+
+
+def _group_size(b: int, t: int) -> int:
+    if t >= 1024 and t % 1024 == 0:
+        return 1024
+    if b * t <= 4096:
+        return b * t  # single global group
+    s = 1
+    for cand in (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if t % cand == 0:
+            return cand
+    return s
+
+
+def moe_apply(
+    p: Dict,
+    x: Array,                    # (B, T, d_model)
+    *,
+    capacity_factor: float = 1.25,
+    activation: str = "silu",
+) -> Tuple[Array, Dict]:
+    """Returns (output, aux) with aux = {lb_loss, z_loss, fraction_dropped}."""
+    b, t, d = x.shape
+    e = p["router"].shape[-1]
+    s_g = _group_size(b, t)
+    g = (b * t) // s_g
+    xg = x.reshape(g, s_g, d)
+    if g > 1:
+        xg = shard_act(xg, ("batch", None, None))
+    cap = max(1, int(s_g / e * capacity_factor))
+
+    # ---- routing (bf16 inputs, f32 accumulation: an explicit f32 cast of
+    # xg here makes XLA share a gathered-f32 copy of the WHOLE token tensor
+    # with the dispatch einsum - 2x the collective bytes; see EXPERIMENTS S4)
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    expert = jnp.argmax(probs, axis=-1)                     # (G, S)
+    gate = jnp.max(probs, axis=-1)                          # (G, S)
+    onehot = jax.nn.one_hot(expert, e, dtype=jnp.float32)   # (G, S, E)
+
+    # switch load-balance loss: E * sum_e fraction_tokens_e * mean_prob_e
+    frac = jnp.mean(onehot, axis=1)                         # (G, E)
+    mean_p = jnp.mean(probs, axis=1)                        # (G, E)
+    lb_loss = e * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- capacity assignment ----
+    pos = jnp.cumsum(onehot, axis=1) - 1.0                  # (G, S, E) slot id
+    pos = jnp.sum(pos * onehot, axis=-1)                    # (G, S) slot of token
+    keep = (pos < cap).astype(jnp.float32)
+    gate = gate * keep
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype)  # (G,S,C)
+    disp = onehot.astype(x.dtype)[..., None] * slot_oh[..., None, :]     # (G,S,E,C)
+    disp = disp * keep.astype(x.dtype)[..., None, None]
+
+    # ---- dispatch: (G,S,D) x (G,S,E,C) -> (G,E,C,D); a2a under SPMD ----
+    # the E dim adopts the expert weights' sharding ('expert' -> data axis);
+    # XLA realizes the G->E resharding as an all-to-all over 'data'.
+    # checkpoint_name lets the save_moe remat policy keep xe so the backward
+    # pass never re-runs the dispatch collective.
+    xe = jnp.einsum("gsd,gsec->gecd", xg, disp)
+    xe = shard_act(xe, (None, "expert", None, None))
+    xe = jax.ad_checkpoint.checkpoint_name(xe, "moe_xe")
+
+    # ---- expert FFN (batched over E, sharded over 'model') ----
+    gate_h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
+    up_h = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    act = jax.nn.silu(gate_h.astype(jnp.float32)).astype(x.dtype) if activation == "silu" \
+        else jax.nn.gelu(gate_h.astype(jnp.float32)).astype(x.dtype)
+    h = act * up_h
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = shard_act(ye, (None, "expert", None, None))
+
+    # ---- combine: weight by gate prob, a2a back ----
+    comb = disp * gate.astype(x.dtype)[..., None, None]
+    y = jnp.einsum("gecd,gsec->gsd", ye, comb)
+    y = y.reshape(b, t, d)
+
+    aux = {
+        "lb_loss": lb_loss,
+        "z_loss": z_loss,
+        "fraction_dropped": 1.0 - jnp.mean(keep),
+    }
+    return y, aux

@@ -1,0 +1,158 @@
+"""Mamba-2 / SSD block (zamba2's backbone layer).
+
+State-space duality recurrence per head (state S in R^{N x P}, N = ssm_state,
+P = head dim):
+
+    S_t = a_t S_{t-1} + b_t^T (dt_t x_t)        a_t = exp(-dt_t * A)  (scalar/head)
+    y_t = c_t S_t + D x_t
+
+with input-dependent (dt, b, c) projections, depthwise causal conv on the
+(x, b, c) stream, gated output.  This is the scalar-decay special case of the
+RWKV6 recurrence, and we reuse the same chunkwise-parallel scan pattern
+(MXU-dense within chunks, lax.scan across chunks, O(N*P) state at decode).
+
+Layout: x (B, T, D); heads H = d_inner / P.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import fsdp_gather, shard_act
+from repro.models.layers import PV, dense_init, ones_init, zeros_init, rms_norm
+
+Array = jax.Array
+
+CONV_K = 4  # depthwise conv kernel width
+
+
+class SsmState(NamedTuple):
+    s: Array        # (B, H, N, P) SSD state
+    conv: Array     # (B, CONV_K - 1, conv_dim) conv tail
+
+
+def ssm_block_init(key, d_model: int, ssm_state: int = 64, head_dim: int = 64,
+                   expand: int = 2, dtype=jnp.bfloat16) -> Dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [x (d_inner), z gate (d_inner), b (N), c (N), dt (H)]
+        "w_in": dense_init(ks[0], (d_model, 2 * d_inner + 2 * ssm_state + n_heads),
+                           ("embed", "mlp"), dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, conv_dim), ("conv", "mlp"), dtype,
+                             scale=CONV_K**-0.5),
+        "conv_b": zeros_init((conv_dim,), ("mlp",), dtype),
+        "a_log": PV(jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+                    ("heads",)),
+        "dt_bias": PV(jnp.full((n_heads,), -4.6, jnp.float32), ("heads",)),  # softplus^-1(0.01)
+        "d_skip": ones_init((n_heads,), ("heads",), jnp.float32),
+        "norm_w": zeros_init((d_inner,), ("mlp",), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def _depthwise_conv(x: Array, w: Array, b: Array, tail: Array) -> Tuple[Array, Array]:
+    """Causal depthwise conv along T.  x: (B, T, C), tail: (B, K-1, C)."""
+    k = w.shape[0]
+    xt = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, T+K-1, C)
+    out = sum(
+        xt[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    ) + b.astype(x.dtype)
+    new_tail = xt[:, -(k - 1):, :] if k > 1 else tail
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def ssd_chunked(
+    xh: Array,    # (B, T, H, P) inputs (dt-scaled)
+    a_log: Array,  # (B, T, H) log-decay per step (negative)
+    bm: Array,    # (B, T, N) input matrix
+    cm: Array,    # (B, T, N) output matrix
+    s0: Array,    # (B, H, N, P)
+    chunk: int = 128,
+) -> Tuple[Array, Array]:
+    """Chunkwise-parallel SSD scan (Mamba-2).  Returns (y (B,T,H,P), s_T)."""
+    b, t, h, p = xh.shape
+    n = bm.shape[-1]
+    assert t % chunk == 0
+    nc = t // chunk
+    xc = jnp.moveaxis(xh.reshape(b, nc, chunk, h, p), 1, 0).astype(jnp.float32)
+    ac = jnp.moveaxis(a_log.reshape(b, nc, chunk, h), 1, 0).astype(jnp.float32)
+    bc = jnp.moveaxis(bm.reshape(b, nc, chunk, n), 1, 0).astype(jnp.float32)
+    cc = jnp.moveaxis(cm.reshape(b, nc, chunk, n), 1, 0).astype(jnp.float32)
+
+    cum = jnp.cumsum(ac, axis=2)        # inclusive (B? no: (nc,B,C,H))
+    cum_excl = cum - ac
+    total = cum[:, :, -1:, :]
+
+    def step(s, inp):
+        x_, a_, b_, c_, cum_, cume_, tot_ = inp
+        # inter-chunk: y_t += c_t exp(cum_t) S_prev      (decay from chunk start)
+        c_dec = c_[:, :, None, :] * jnp.exp(cum_)[..., None]  # (B,C,H,N)
+        y_inter = jnp.einsum("bchn,bhnp->bchp", c_dec, s)
+        # intra-chunk: y_t += sum_{u<=t} exp(cum_t - cum_u) (c_t . b_u) x_u
+        scores = jnp.einsum("bcn,bun->bcu", c_, b_)  # (B, C, U)
+        c_idx = jnp.arange(x_.shape[1])
+        causal = c_idx[:, None] >= c_idx[None, :]
+        decay = jnp.exp(cum_[:, :, None, :] - cum_[:, None, :, :])  # (B,C,U,H)
+        scores = jnp.where(causal[None, :, :, None], scores[..., None] * decay, 0.0)
+        y_intra = jnp.einsum("bcuh,buhp->bchp", scores, x_)
+        # state: S = exp(total) S + sum_u exp(total - cum_u) b_u^T x_u
+        b_dec = b_[:, :, None, :] * jnp.exp(tot_ - cum_)[..., None]  # (B,C,H,N)
+        s_new = jnp.exp(tot_)[:, 0, :, None, None] * s + jnp.einsum(
+            "bchn,bchp->bhnp", b_dec, x_
+        )
+        return s_new, y_inter + y_intra
+
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                             (xc, ac, bc, cc, cum, cum_excl, total))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, p)
+    return y, s_fin
+
+
+def ssm_block_apply(
+    p: Dict, x: Array, state: SsmState, *, ssm_state: int = 64,
+    head_dim: int = 64, expand: int = 2, chunk: int = 128, eps: float = 1e-5,
+) -> Tuple[Array, SsmState]:
+    """Mamba-2 block over a sequence (prefill/train) or one step (T=1)."""
+    b, t, d = x.shape
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+    n = ssm_state
+
+    proj = x @ fsdp_gather(p["w_in"], ("embed", "mlp")).astype(x.dtype)
+    xz, z, bm, cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xz, bm, cm], axis=-1)
+    conv_out, new_tail = _depthwise_conv(conv_in, p["conv_w"], p["conv_b"], state.conv)
+    xz, bm, cm = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,) negative
+    a_log_step = dt * a                                           # (B,T,H) log decay
+    xh = xz.reshape(b, t, n_heads, head_dim).astype(jnp.float32) * dt[..., None]
+
+    chunk = min(chunk, t)
+    y, s_new = ssd_chunked(xh, a_log_step, bm, cm, state.s, chunk=chunk)
+    y = y + p["d_skip"][None, None, :, None] * xz.reshape(b, t, n_heads, head_dim).astype(jnp.float32)
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+    y = rms_norm(y, p["norm_w"], eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = shard_act(y, ("batch", None, "act_model"))
+    out = y @ fsdp_gather(p["w_out"], ("mlp", "embed")).astype(x.dtype)
+    return out, SsmState(s=s_new.astype(state.s.dtype), conv=new_tail.astype(state.conv.dtype))
+
+
+def ssm_state_init(batch: int, d_model: int, ssm_state: int = 64,
+                   head_dim: int = 64, expand: int = 2, dtype=jnp.float32) -> SsmState:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * ssm_state
+    return SsmState(
+        s=jnp.zeros((batch, n_heads, ssm_state, head_dim), dtype),
+        conv=jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+    )

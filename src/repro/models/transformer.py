@@ -1,0 +1,718 @@
+"""Generic multi-family LM stack: dense / MoE / RWKV6 / Mamba2-hybrid /
+encoder-decoder, built from one ArchConfig.
+
+Layer stacks are parameter-stacked and driven by ``lax.scan`` (compile time
+O(1) in depth; per-layer remat policy), with per-layer scanned scalars for
+heterogeneous schedules (gemma3's 5:1 local:global windows).
+
+Decode paths operate on explicit cache pytrees so `serve_step` lowers with
+ShapeDtypeStruct caches in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd_mod
+from repro.distributed.sharding import shard_act
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (
+    PV,
+    apply_m_rope,
+    apply_rope,
+    dense_init,
+    embed_init,
+    embed_lookup,
+    is_pv,
+    layer_norm,
+    ones_init,
+    rms_norm,
+    split_tree,
+    unembed,
+    zeros_init,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def stack_layer_trees(trees):
+    """Stack per-layer PV trees into one tree with a leading 'layers' axis."""
+
+    def stack(*pvs):
+        return PV(
+            jnp.stack([pv.value for pv in pvs]), ("layers",) + tuple(pvs[0].axes)
+        )
+
+    return jax.tree_util.tree_map(stack, *trees, is_leaf=is_pv)
+
+
+def _norm(cfg: ArchConfig, p: Dict, x: Array, name: str) -> Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p[f"{name}_w"], p[f"{name}_b"], cfg.rms_eps)
+    return rms_norm(x, p[f"{name}_w"], cfg.rms_eps)
+
+
+def _norm_init(cfg: ArchConfig, d: int, name: str) -> Dict:
+    if cfg.norm == "layernorm":
+        return {
+            f"{name}_w": ones_init((d,), ("embed_no_shard",), cfg.dtype),
+            f"{name}_b": zeros_init((d,), ("embed_no_shard",), cfg.dtype),
+        }
+    return {f"{name}_w": zeros_init((d,), ("embed_no_shard",), cfg.dtype)}
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat_policy == "save_moe":
+        # keep the dispatched expert inputs: backward re-runs only the local
+        # expert FFN, never the dispatch collective (EXPERIMENTS S4)
+        pol = jax.checkpoint_policies.save_only_these_names("moe_xe")
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nq), ("embed", "heads"), cfg.dtype),
+        "wk": dense_init(ks[1], (d, nkv), ("embed", "kv"), cfg.dtype),
+        "wv": dense_init(ks[2], (d, nkv), ("embed", "kv"), cfg.dtype),
+        "wo": dense_init(ks[3], (nq, d), ("heads", "embed"), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((nq,), ("heads",), cfg.dtype)
+        p["bk"] = zeros_init((nkv,), ("kv",), cfg.dtype)
+        p["bv"] = zeros_init((nkv,), ("kv",), cfg.dtype)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: Dict, xq: Array, xkv: Array):
+    b, tq, d = xq.shape
+    tk = xkv.shape[1]
+    hd = cfg.head_dim
+    q = xq @ shd_mod.fsdp_gather(p["wq"], ("embed", "heads")).astype(xq.dtype)
+    k = xkv @ shd_mod.fsdp_gather(p["wk"], ("embed", "kv")).astype(xq.dtype)
+    v = xkv @ shd_mod.fsdp_gather(p["wv"], ("embed", "kv")).astype(xq.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, tq, cfg.n_heads, hd)
+    k = k.reshape(b, tk, cfg.n_kv_heads, hd)
+    v = v.reshape(b, tk, cfg.n_kv_heads, hd)
+    q = shard_act(q, ("batch", None, "heads", None))
+    k = shard_act(k, ("batch", None, "kv", None))
+    v = shard_act(v, ("batch", None, "kv", None))
+    return q, k, v
+
+
+def attn_apply_full(
+    cfg: ArchConfig,
+    p: Dict,
+    x: Array,
+    window,
+    *,
+    causal: bool = True,
+    positions: Optional[Array] = None,
+    kv_x: Optional[Array] = None,       # cross attention source
+) -> Array:
+    """Training/prefill attention over a full sequence."""
+    b, t, d = x.shape
+    xkv = kv_x if kv_x is not None else x
+    q, k, v = _qkv(cfg, p, x, xkv)
+    if cfg.pos == "rope" and kv_x is None:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        if cfg.m_rope:
+            pos3 = positions if positions.ndim == 3 else jnp.repeat(
+                positions[..., None], 3, axis=-1
+            )
+            q = apply_m_rope(q, pos3, cfg.rope_theta, cfg.m_rope_sections)
+            k = apply_m_rope(k, pos3, cfg.rope_theta, cfg.m_rope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_impl == "pallas":
+        # NOTE: per-layer scanned windows (gemma3) carry a traced window
+        # scalar; the Pallas kernel needs it static, so windowed archs keep
+        # the (scoped) XLA path on TPU until the scan is split by window kind.
+        use_kernel = not cfg.window_pattern
+        flash = attn_mod.make_flash_scoped(
+            causal, cfg.block_q, cfg.block_k, use_kernel=use_kernel
+        )
+        out = flash(q, k, v, jnp.asarray(window, jnp.int32))
+    else:
+        out = attn_mod.blockwise_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=cfg.block_q, block_k=cfg.block_k,
+        )
+    out = out.reshape(b, t, cfg.n_heads * cfg.head_dim)
+    wo = shd_mod.fsdp_gather(p["wo"], ("heads", "embed"))
+    return out @ wo.astype(x.dtype)
+
+
+def attn_apply_decode(
+    cfg: ArchConfig,
+    p: Dict,
+    x: Array,             # (B, 1, d)
+    cache: KVCache,
+    window,
+    *,
+    cross: bool = False,
+) -> Tuple[Array, KVCache]:
+    b, _, d = x.shape
+    hd = cfg.head_dim
+    if cross:
+        # cross-attention at decode: cache holds precomputed enc K/V
+        q = (x @ p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(q.dtype)
+        q = q.reshape(b, 1, cfg.n_heads, hd)
+        out = attn_mod.decode_attention(q, cache.k, cache.v, cache.length, window=0)
+        out = out.reshape(b, 1, cfg.n_heads * hd)
+        return out @ p["wo"].astype(x.dtype), cache
+    q, k, v = _qkv(cfg, p, x, x)
+    pos = cache.length[0]
+    if cfg.pos == "rope":
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        if cfg.m_rope:
+            pos3 = jnp.repeat(positions[..., None], 3, axis=-1)
+            q = apply_m_rope(q, pos3, cfg.rope_theta, cfg.m_rope_sections)
+            k = apply_m_rope(k, pos3, cfg.rope_theta, cfg.m_rope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    cache = cache.append(k, v)
+    out = attn_mod.decode_attention(q, cache.k, cache.v, cache.length, window=window)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return out @ p["wo"].astype(x.dtype), cache
+
+
+# ---------------------------------------------------------------------------
+# decoder layer (dense / moe)
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ArchConfig, cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"attn": attn_init(ks[0], cfg)}
+    p.update(_norm_init(cfg, d, "ln_attn"))
+    if cross:
+        p["cross"] = attn_init(ks[3], cfg, cross=True)
+        p.update(_norm_init(cfg, d, "ln_cross"))
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], d, cfg.d_ff, cfg.n_experts, cfg.dtype)
+    else:
+        p["mlp"] = ffn_mod.mlp_init(ks[1], d, cfg.d_ff, cfg.dtype,
+                                    gated=(cfg.act == "silu"))
+    p.update(_norm_init(cfg, d, "ln_mlp"))
+    return p
+
+
+def _barrier(cfg: ArchConfig, h: Array) -> Array:
+    return jax.lax.optimization_barrier(h) if cfg.act_barrier else h
+
+
+def layer_apply_full(
+    cfg: ArchConfig, p: Dict, x: Array, window, *,
+    causal: bool = True, positions=None, enc_out: Optional[Array] = None,
+) -> Tuple[Array, Dict]:
+    aux = {}
+    h = attn_apply_full(cfg, p["attn"], _norm(cfg, p, x, "ln_attn"), window,
+                        causal=causal, positions=positions)
+    h = _barrier(cfg, h)
+    x = x + h
+    if "cross" in p and enc_out is not None:
+        h = attn_apply_full(cfg, p["cross"], _norm(cfg, p, x, "ln_cross"),
+                            0, causal=False, kv_x=enc_out)
+        x = x + h
+    if cfg.family == "moe":
+        h, aux = moe_mod.moe_apply(p["moe"], _norm(cfg, p, x, "ln_mlp"),
+                                   capacity_factor=cfg.capacity_factor,
+                                   activation=cfg.act)
+    else:
+        h = ffn_mod.mlp_apply(p["mlp"], _norm(cfg, p, x, "ln_mlp"), cfg.act)
+    x = x + _barrier(cfg, h)
+    x = shard_act(x, ("batch", None, None))
+    return x, aux
+
+
+def layer_apply_decode(
+    cfg: ArchConfig, p: Dict, x: Array, cache: KVCache, window,
+    cross_cache: Optional[KVCache] = None,
+) -> Tuple[Array, KVCache]:
+    h, cache = attn_apply_decode(cfg, p["attn"], _norm(cfg, p, x, "ln_attn"),
+                                 cache, window)
+    x = x + h
+    if "cross" in p and cross_cache is not None:
+        h, _ = attn_apply_decode(cfg, p["cross"], _norm(cfg, p, x, "ln_cross"),
+                                 cross_cache, 0, cross=True)
+        x = x + h
+    if cfg.family == "moe":
+        h, _ = moe_mod.moe_apply(p["moe"], _norm(cfg, p, x, "ln_mlp"),
+                                 capacity_factor=2.0, activation=cfg.act)
+    else:
+        h = ffn_mod.mlp_apply(p["mlp"], _norm(cfg, p, x, "ln_mlp"), cfg.act)
+    x = x + h
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# rwkv / ssm layers (attention-free families)
+# ---------------------------------------------------------------------------
+
+
+def rwkv_layer_init(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    p = {"time_mix": rwkv_mod.rwkv_block_init(ks[0], d, cfg.rwkv_head_dim,
+                                              dtype=cfg.dtype)}
+    p.update(_norm_init(cfg, d, "ln_attn"))
+    p["mlp"] = ffn_mod.mlp_init(ks[1], d, cfg.d_ff, cfg.dtype, gated=True)
+    p.update(_norm_init(cfg, d, "ln_mlp"))
+    return p
+
+
+def ssm_layer_init(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    p = {"ssm": ssm_mod.ssm_block_init(key, d, cfg.ssm_state, cfg.ssm_head_dim,
+                                       cfg.ssm_expand, cfg.dtype)}
+    p.update(_norm_init(cfg, d, "ln_attn"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the model facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Transformer:
+    cfg: ArchConfig
+
+    # ---- init -------------------------------------------------------------
+
+    def init_pv(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, cfg.dtype)
+        }
+        p.update(_norm_init(cfg, cfg.d_model, "ln_f"))
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(
+                keys[1], (cfg.padded_vocab, cfg.d_model), ("vocab", "embed_no_shard"),
+                cfg.dtype, fan_in=cfg.d_model,
+            )
+        if cfg.is_encdec:
+            lk = jax.random.split(keys[2], cfg.enc_layers)
+            p["enc_layers"] = stack_layer_trees([layer_init(k, cfg) for k in lk])
+            lk = jax.random.split(keys[3], cfg.dec_layers)
+            p["dec_layers"] = stack_layer_trees(
+                [layer_init(k, cfg, cross=True) for k in lk]
+            )
+            p.update(_norm_init(cfg, cfg.d_model, "ln_enc"))
+            # absolute positions for whisper-style models
+            p["pos_embed"] = PV(
+                _sinusoidal(cfg.max_abs_pos, cfg.d_model).astype(cfg.dtype),
+                ("seq", "embed_no_shard"),
+            )
+        elif cfg.rwkv:
+            lk = jax.random.split(keys[2], cfg.n_layers)
+            p["layers"] = stack_layer_trees([rwkv_layer_init(k, cfg) for k in lk])
+        elif cfg.family == "hybrid":
+            lk = jax.random.split(keys[2], cfg.n_layers)
+            p["layers"] = stack_layer_trees([ssm_layer_init(k, cfg) for k in lk])
+            p["shared_attn"] = layer_init(keys[4], cfg)  # ONE shared block
+        else:
+            lk = jax.random.split(keys[2], cfg.n_layers)
+            p["layers"] = stack_layer_trees([layer_init(k, cfg) for k in lk])
+        return p
+
+    def init(self, key) -> Tuple[Dict, Dict]:
+        """Returns (params values tree, logical axes tree)."""
+        return split_tree(self.init_pv(key))
+
+    def axes(self) -> Dict:
+        """Logical axes tree without allocating (via eval_shape)."""
+        pv = jax.eval_shape(lambda: self.init_pv(jax.random.PRNGKey(0)))
+        return jax.tree_util.tree_map(
+            lambda leaf: leaf.axes, pv, is_leaf=lambda x: isinstance(x, PV)
+        )
+
+    def param_shapes(self) -> Dict:
+        pv = jax.eval_shape(lambda: self.init_pv(jax.random.PRNGKey(0)))
+        return jax.tree_util.tree_map(
+            lambda leaf: jax.ShapeDtypeStruct(leaf.value.shape, leaf.value.dtype),
+            pv, is_leaf=lambda x: isinstance(x, PV),
+        )
+
+    # ---- layer-window schedule ---------------------------------------------
+
+    def window_schedule(self, n_layers: int) -> Array:
+        cfg = self.cfg
+        if not cfg.window_pattern:
+            return jnp.zeros((n_layers,), jnp.int32)
+        pat = [cfg.window_for_layer(i) for i in range(n_layers)]
+        return jnp.asarray(pat, jnp.int32)
+
+    # ---- forward (train / prefill trunk) ------------------------------------
+
+    def _trunk(self, params: Dict, x: Array, *, causal=True,
+               positions=None, enc_out=None, collect_aux=False):
+        cfg = self.cfg
+        if cfg.rwkv:
+            return self._trunk_rwkv(params, x)
+        if cfg.family == "hybrid":
+            return self._trunk_hybrid(params, x)
+        key_layers = "dec_layers" if cfg.is_encdec else "layers"
+        windows = self.window_schedule(
+            cfg.dec_layers if cfg.is_encdec else cfg.n_layers
+        )
+
+        def body(carry, inp):
+            x = carry
+            lp, w = inp
+            x, aux = layer_apply_full(cfg, lp, x, w, causal=causal,
+                                      positions=positions, enc_out=enc_out)
+            stats = (aux.get("lb_loss", jnp.zeros((), jnp.float32)),
+                     aux.get("z_loss", jnp.zeros((), jnp.float32)))
+            return x, stats
+
+        body = _remat(cfg, body)
+        x, stats = jax.lax.scan(body, x, (params[key_layers], windows))
+        aux = {"lb_loss": jnp.mean(stats[0]), "z_loss": jnp.mean(stats[1])}
+        return x, aux
+
+    def _trunk_rwkv(self, params: Dict, x: Array):
+        cfg = self.cfg
+        b = x.shape[0]
+        hd = cfg.rwkv_head_dim
+        nh = cfg.d_model // hd
+
+        def body(carry, lp):
+            x = carry
+            st = rwkv_mod.RwkvState(
+                s=jnp.zeros((b, nh, hd, hd), jnp.float32),
+                x_last=jnp.zeros((b, cfg.d_model), x.dtype),
+            )
+            h, _ = rwkv_mod.rwkv_block_apply(
+                lp["time_mix"], _norm(cfg, lp, x, "ln_attn"), st,
+                head_dim=hd, chunk=cfg.scan_chunk, eps=cfg.rms_eps,
+            )
+            x = x + _barrier(cfg, h)
+            h = ffn_mod.mlp_apply(lp["mlp"], _norm(cfg, lp, x, "ln_mlp"), cfg.act)
+            x = x + _barrier(cfg, h)
+            return shard_act(x, ("batch", None, None)), None
+
+        body = _remat(cfg, body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, {}
+
+    def _trunk_hybrid(self, params: Dict, x: Array):
+        cfg = self.cfg
+        b = x.shape[0]
+
+        def ssm_body(carry, lp):
+            x = carry
+            st = ssm_mod.ssm_state_init(b, cfg.d_model, cfg.ssm_state,
+                                        cfg.ssm_head_dim, cfg.ssm_expand)
+            h, _ = ssm_mod.ssm_block_apply(
+                lp["ssm"], _norm(cfg, lp, x, "ln_attn"), st,
+                ssm_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, chunk=cfg.scan_chunk, eps=cfg.rms_eps,
+            )
+            return shard_act(x + h, ("batch", None, None)), None
+
+        ssm_body = _remat(cfg, ssm_body)
+        per = cfg.attn_every
+        n_seg, rem = divmod(cfg.n_layers, per)
+        layers = params["layers"]
+
+        def seg_slice(lo, ln):
+            return jax.tree_util.tree_map(lambda a: a[lo : lo + ln], layers)
+
+        shared_fn = _remat(
+            cfg,
+            lambda x: layer_apply_full(cfg, params["shared_attn"], x, 0)[0],
+        )
+        for s in range(n_seg):
+            x, _ = jax.lax.scan(ssm_body, x, seg_slice(s * per, per))
+            x = shared_fn(x)
+        if rem:
+            x, _ = jax.lax.scan(ssm_body, x, seg_slice(n_seg * per, rem))
+        return x, {}
+
+    # ---- public entry points -------------------------------------------------
+
+    def train_logits(self, params: Dict, tokens=None, embeds=None,
+                     enc_embeds=None) -> Tuple[Array, Dict]:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return self._encdec_logits(params, tokens, enc_embeds)
+        if embeds is not None:
+            x = embeds
+        else:
+            x = embed_lookup(params["embed"], tokens)
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        x = shard_act(x, ("batch", None, None))
+        x, aux = self._trunk(params, x, collect_aux=True)
+        x = _norm(cfg, params, x, "ln_f")
+        logits = unembed(x, params.get("unembed", params["embed"]))
+        return logits, aux
+
+    def _encdec_logits(self, params: Dict, tokens, enc_embeds):
+        cfg = self.cfg
+        enc = enc_embeds + params["pos_embed"][: enc_embeds.shape[1]][None]
+        windows = self.window_schedule(cfg.enc_layers)
+
+        def enc_body(carry, inp):
+            lp, w = inp
+            h, _ = layer_apply_full(cfg, lp, carry, w, causal=False)
+            return h, None
+
+        enc_body = _remat(cfg, enc_body)
+        enc, _ = jax.lax.scan(enc_body, enc, (params["enc_layers"], windows))
+        enc = _norm(cfg, params, enc, "ln_enc")
+
+        x = embed_lookup(params["embed"], tokens)
+        x = x + params["pos_embed"][: x.shape[1]][None].astype(x.dtype)
+        x, aux = self._trunk(params, x, enc_out=enc)
+        x = _norm(cfg, params, x, "ln_f")
+        logits = unembed(x, params.get("unembed", params["embed"]))
+        return logits, aux
+
+    # ---- caches ---------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        if cfg.rwkv:
+            hd = cfg.rwkv_head_dim
+            nh = cfg.d_model // hd
+            return {
+                "s": jnp.zeros((cfg.n_layers, batch, nh, hd, hd), jnp.float32),
+                "x_last": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+                "len": jnp.zeros((batch,), jnp.int32),
+            }
+        if cfg.family == "hybrid":
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_head_dim
+            conv_dim = d_in + 2 * cfg.ssm_state
+            n_sites = cfg.n_layers // cfg.attn_every
+            return {
+                "s": jnp.zeros((cfg.n_layers, batch, nh, cfg.ssm_state,
+                                cfg.ssm_head_dim), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch, ssm_mod.CONV_K - 1,
+                                   conv_dim), cfg.dtype),
+                "attn_k": jnp.zeros((n_sites, batch, max_len, cfg.n_kv_heads,
+                                     cfg.head_dim), cfg.dtype),
+                "attn_v": jnp.zeros((n_sites, batch, max_len, cfg.n_kv_heads,
+                                     cfg.head_dim), cfg.dtype),
+                "len": jnp.zeros((batch,), jnp.int32),
+            }
+        n_layers = cfg.dec_layers if cfg.is_encdec else cfg.n_layers
+        cache = {
+            "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.dtype),
+            "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+        if cfg.is_encdec:
+            cache["cross_k"] = jnp.zeros(
+                (n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), cfg.dtype
+            )
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+            cache["enc_len"] = jnp.zeros((batch,), jnp.int32)
+        return cache
+
+    def cache_specs(self, batch: int, max_len: int, enc_len: int = 0):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, enc_len))
+
+    def cache_axes(self, batch: int, max_len: int, enc_len: int = 0):
+        """Logical axes for the cache pytree (for sharding)."""
+        cache = self.cache_specs(batch, max_len, enc_len)
+
+        def ax(path_leaf):
+            name, leaf = path_leaf
+            if name in ("len", "enc_len"):
+                return (None,)
+            if name in ("s",):
+                return (None, "batch", "heads", None, None)
+            if name == "conv":
+                return (None, "batch", None, "mlp")
+            if name == "x_last":
+                return (None, "batch", None)
+            # k/v caches: (L, B, S, KV, D) - shard batch over data, kv heads
+            # over model when divisible, else head_dim over model ("kv_alt";
+            # the divisibility guard keeps the first axis that fits)
+            return (None, "batch", None, "kv", "kv_alt")
+
+        return {k: ax((k, v)) for k, v in cache.items()}
+
+    # ---- decode -----------------------------------------------------------------
+
+    def decode_step(self, params: Dict, token: Array, cache) -> Tuple[Array, Any]:
+        cfg = self.cfg
+        if cfg.rwkv:
+            return self._decode_rwkv(params, token, cache)
+        if cfg.family == "hybrid":
+            return self._decode_hybrid(params, token, cache)
+        x = embed_lookup(params["embed"], token)
+        if not cfg.is_encdec:  # matches train_logits' scaling convention
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        if cfg.pos == "absolute":
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], cache["len"][0], 1, axis=0
+            )[None].astype(x.dtype)
+        n_layers = cfg.dec_layers if cfg.is_encdec else cfg.n_layers
+        windows = self.window_schedule(n_layers)
+
+        def body(x, inp):
+            if cfg.is_encdec:
+                lp, w, kc, vc, ck, cv = inp
+            else:
+                lp, w, kc, vc = inp
+                ck = cv = None
+            cache_l = KVCache(k=kc, v=vc, length=cache["len"])
+            cross_l = (
+                KVCache(k=ck, v=cv, length=cache["enc_len"]) if cfg.is_encdec else None
+            )
+            x, new_cache = layer_apply_decode(cfg, lp, x, cache_l, w, cross_l)
+            return x, (new_cache.k, new_cache.v)
+
+        key_layers = "dec_layers" if cfg.is_encdec else "layers"
+        xs = (params[key_layers], windows, cache["k"], cache["v"])
+        if cfg.is_encdec:
+            xs = xs + (cache["cross_k"], cache["cross_v"])
+        x, (new_k, new_v) = jax.lax.scan(body, x, xs)
+        x = _norm(cfg, params, x, "ln_f")
+        logits = unembed(x, params.get("unembed", params["embed"]))
+        new_cache = dict(cache)
+        new_cache.update(k=new_k, v=new_v, len=cache["len"] + 1)
+        return logits[:, -1], new_cache
+
+    def _decode_rwkv(self, params, token, cache):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], token)
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        hd = cfg.rwkv_head_dim
+
+        def body(x, inp):
+            lp, s, x_last = inp
+            st = rwkv_mod.RwkvState(s=s, x_last=x_last)
+            h, st2 = rwkv_mod.rwkv_decode_step(
+                lp["time_mix"], _norm(cfg, lp, x, "ln_attn"), st,
+                head_dim=hd, eps=cfg.rms_eps,
+            )
+            x = x + h
+            h = ffn_mod.mlp_apply(lp["mlp"], _norm(cfg, lp, x, "ln_mlp"), cfg.act)
+            x = x + h
+            return x, (st2.s, st2.x_last)
+
+        x, (new_s, new_xl) = jax.lax.scan(
+            body, x, (params["layers"], cache["s"], cache["x_last"])
+        )
+        x = _norm(cfg, params, x, "ln_f")
+        logits = unembed(x, params.get("unembed", params["embed"]))
+        return logits[:, -1], {"s": new_s, "x_last": new_xl, "len": cache["len"] + 1}
+
+    def _decode_hybrid(self, params, token, cache):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], token)
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+
+        def ssm_body(x, inp):
+            lp, s, conv = inp
+            st = ssm_mod.SsmState(s=s, conv=conv)
+            h, st2 = ssm_mod.ssm_block_apply(
+                lp["ssm"], _norm(cfg, lp, x, "ln_attn"), st,
+                ssm_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, chunk=1, eps=cfg.rms_eps,
+            )
+            return x + h, (st2.s, st2.conv)
+
+        per = cfg.attn_every
+        n_seg, rem = divmod(cfg.n_layers, per)
+        new_s, new_conv, new_k, new_v = [], [], [], []
+        layers = params["layers"]
+
+        def seg(lo, ln, x):
+            xs = (
+                jax.tree_util.tree_map(lambda a: a[lo : lo + ln], layers),
+                cache["s"][lo : lo + ln],
+                cache["conv"][lo : lo + ln],
+            )
+            x, (s2, c2) = jax.lax.scan(ssm_body, x, xs)
+            return x, s2, c2
+
+        for si in range(n_seg):
+            x, s2, c2 = seg(si * per, per, x)
+            new_s.append(s2)
+            new_conv.append(c2)
+            cache_l = KVCache(k=cache["attn_k"][si], v=cache["attn_v"][si],
+                              length=cache["len"])
+            x, cl = layer_apply_decode(cfg, params["shared_attn"], x, cache_l, 0)
+            new_k.append(cl.k)
+            new_v.append(cl.v)
+        if rem:
+            x, s2, c2 = seg(n_seg * per, rem, x)
+            new_s.append(s2)
+            new_conv.append(c2)
+        x = _norm(cfg, params, x, "ln_f")
+        logits = unembed(x, params.get("unembed", params["embed"]))
+        return logits[:, -1], {
+            "s": jnp.concatenate(new_s, 0),
+            "conv": jnp.concatenate(new_conv, 0),
+            "attn_k": jnp.stack(new_k, 0),
+            "attn_v": jnp.stack(new_v, 0),
+            "len": cache["len"] + 1,
+        }
+
+    # ---- prefill -------------------------------------------------------------
+
+    def prefill(self, params: Dict, tokens=None, embeds=None, enc_embeds=None):
+        """Full-sequence forward returning last-position logits.
+
+        NOTE: returns logits only; cache construction during prefill is the
+        serving runtime's job (runtime/server.py appends chunk-wise).  The
+        dry-run's prefill cell measures this trunk, which dominates cost.
+        """
+        logits, _ = self.train_logits(params, tokens=tokens, embeds=embeds,
+                                      enc_embeds=enc_embeds)
+        return logits[:, -1]
+
+
+def _sinusoidal(max_len: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(max_len)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    sgd,
+    clip_by_global_norm,
+    make_optimizer,
+)
+from repro.optim.schedule import cosine_schedule, constant_schedule  # noqa: F401
+from repro.optim.compression import compress_int8, decompress_int8  # noqa: F401

@@ -1,0 +1,181 @@
+"""Optimizers (pure JAX, no optax in this container).
+
+* sgd       - plain SGD (+momentum), the paper's reservoir trainer uses the
+              specialized variant in repro.core.backprop.apply_sgd.
+* adamw     - decoupled weight decay Adam, f32 states.
+* adafactor - factored second moment (T5X-style): the optimizer of choice for
+              the 100B+ configs (state = O(rows + cols) instead of O(n)).
+
+State trees mirror the param tree; optimizer state sharding follows the
+parameter's logical axes (ZeRO-style: states inherit the FSDP sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Array], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return new, state
+        vel = jax.tree_util.tree_map(
+            lambda v, g: momentum * v + g.astype(jnp.float32), state, grads
+        )
+        new = jax.tree_util.tree_map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype), params, vel
+        )
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def step(p, m, n):
+            upd = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(step, params, mu, nu)
+        return new, AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init, update)
+
+
+class FactorState(NamedTuple):
+    row: Any     # per-param row accumulator (or full nu for <2D params)
+    col: Any
+    count: Array
+
+
+def adafactor(eps: float = 1e-30, decay: float = 0.8,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018, simplified).
+
+    For params with >= 2 dims: keeps row/col mean-square accumulators over
+    the last two axes (O(rows+cols) memory).  For 0/1-D params: full
+    accumulator.  No first moment (as in T5X defaults for LLM pretraining).
+    """
+
+    def init(params):
+        def rows(p):
+            if p.ndim < 2:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+
+        def cols(p):
+            if p.ndim < 2:
+                return jnp.zeros((1,), jnp.float32)
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        return FactorState(
+            row=jax.tree_util.tree_map(rows, params),
+            col=jax.tree_util.tree_map(cols, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** -decay
+
+        def upd_one(p, g, r, cl):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if p.ndim < 2:
+                r2 = beta * r + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(r2 + eps)
+                new_r, new_c = r2, cl
+            else:
+                row_mean = jnp.mean(g2, axis=-1)
+                col_mean = jnp.mean(g2, axis=-2)
+                r2 = beta * r + (1 - beta) * row_mean
+                c2 = beta * cl + (1 - beta) * col_mean
+                r_factor = jax.lax.rsqrt(
+                    r2 / jnp.maximum(jnp.mean(r2, axis=-1, keepdims=True), eps) + eps
+                )
+                c_factor = jax.lax.rsqrt(c2 + eps)
+                u = gf * r_factor[..., None] * c_factor[..., None, :]
+                new_r, new_c = r2, c2
+            # relative update clipping
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_r, new_c
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        rflat = treedef.flatten_up_to(state.row)
+        cflat = treedef.flatten_up_to(state.col)
+        out = [upd_one(p, g, r, cl) for p, g, r, cl in zip(flat, gflat, rflat, cflat)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_r = treedef.unflatten([o[1] for o in out])
+        new_c = treedef.unflatten([o[2] for o in out])
+        return new_p, FactorState(row=new_r, col=new_c, count=c)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name}")

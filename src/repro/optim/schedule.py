@@ -1,0 +1,32 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def paper_step_schedule(base: float, drops: tuple, steps_per_epoch: int):
+    """The paper's x0.1-at-epoch schedule, expressed per optimizer step."""
+    def fn(step):
+        epoch = step // jnp.maximum(steps_per_epoch, 1)
+        mult = 1.0
+        out = jnp.asarray(base, jnp.float32)
+        for e in drops:
+            out = jnp.where(epoch >= e, out * 0.1, out)
+        return out
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerConfig, ElasticRestart  # noqa: F401
+from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
+from repro.runtime.server import Server, Request  # noqa: F401

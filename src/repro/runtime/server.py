@@ -1,0 +1,129 @@
+"""Batched inference server: continuous-batching decode loop.
+
+A minimal-but-real serving runtime:
+  * requests queue up with prompts; the scheduler packs up to ``max_batch``
+    concurrent sequences into the fixed decode batch (padding unused rows),
+  * prefill runs chunk-wise through the decode path (token-by-token for
+    recurrent archs; chunked cache append for attention archs),
+  * each decode step emits one token for every live row; finished rows
+    (EOS or max_tokens) retire and their slots are refilled (continuous
+    batching),
+  * per-row state is owned by the fixed-shape cache pytree, so the jitted
+    decode step never re-specializes.
+
+The dry-run's decode cells measure exactly the ``decode_step`` this server
+drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (T,) int32
+    max_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submit_t: float = 0.0
+    finish_t: float = 0.0
+
+
+class Server:
+    def __init__(
+        self,
+        model: Transformer,
+        params,
+        max_batch: int = 8,
+        max_len: int = 512,
+        eos_id: int = -1,
+    ):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)   # tokens consumed
+        self.cache = model.init_cache(max_batch, max_len)
+        self._decode = jax.jit(model.decode_step)
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        req.submit_t = time.perf_counter()
+        self.queue.append(req)
+
+    # -- scheduling --------------------------------------------------------------
+
+    def _admit(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.slot_pos[i] = 0
+                self._reset_row(i)
+
+    def _reset_row(self, i: int):
+        """Zero row i of every per-row cache buffer (slot reuse)."""
+        def zero_row(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.max_batch:
+                return leaf.at[:, i].set(0)
+            if leaf.ndim >= 1 and leaf.shape[0] == self.max_batch:
+                return leaf.at[i].set(0)
+            return leaf
+
+        self.cache = jax.tree_util.tree_map(zero_row, self.cache)
+
+    def _active(self) -> bool:
+        return any(s is not None for s in self.slots) or bool(self.queue)
+
+    # -- the decode loop -----------------------------------------------------------
+
+    def step(self):
+        """One global decode step: feeds each live row its next input token
+        (prompt token during prefill phase, else the last sampled token)."""
+        self._admit()
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = self.slot_pos[i]
+            if pos < len(req.prompt):
+                tok[i, 0] = req.prompt[pos]          # prefill phase
+            elif req.out_tokens:
+                tok[i, 0] = req.out_tokens[-1]       # decode phase
+        logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] >= len(req.prompt):
+                req.out_tokens.append(int(nxt[i]))
+                if (
+                    len(req.out_tokens) >= req.max_tokens
+                    or int(nxt[i]) == self.eos_id
+                    or self.slot_pos[i] + len(req.out_tokens) >= self.max_len - 1
+                ):
+                    req.done = True
+                    req.finish_t = time.perf_counter()
+                    self.completed.append(req)
+                    self.slots[i] = None   # continuous batching: slot refills
+
+    def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
+        steps = 0
+        while self._active() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed

@@ -1,0 +1,55 @@
+"""Straggler detection & mitigation.
+
+At 1000+ nodes the p99 host decides step time.  The watchdog keeps an EWMA
+of step durations; a step exceeding ``threshold x EWMA`` marks the
+(simulated or real) slow host as suspect.  Mitigation hooks:
+
+  * ``deadline_exceeded`` -> the trainer re-dispatches the step (the batch
+    is deterministic in step index, so a re-dispatch is exactly-once in
+    effect),
+  * repeated offenders -> the elastic controller (runtime/trainer.py)
+    rebuilds the mesh without the suspect host and restores from the last
+    checkpoint (restore is resharding-capable, so N-1 hosts is fine).
+
+On this single-process container the watchdog logic is exercised by unit
+tests with simulated durations; on a real cluster the same object consumes
+per-host step timings from the coordination service.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 2.5          # x EWMA => suspect
+    ewma_alpha: float = 0.1
+    strikes_to_evict: int = 3
+
+    ewma: Optional[float] = None
+    strikes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    evicted: List[str] = dataclasses.field(default_factory=list)
+
+    def observe(self, host: str, duration_s: float) -> str:
+        """Feed one step duration; returns 'ok' | 'suspect' | 'evict'."""
+        if self.ewma is None:
+            self.ewma = duration_s
+            return "ok"
+        verdict = "ok"
+        if duration_s > self.threshold * self.ewma:
+            self.strikes[host] = self.strikes.get(host, 0) + 1
+            verdict = "suspect"
+            if self.strikes[host] >= self.strikes_to_evict:
+                self.evicted.append(host)
+                self.strikes[host] = 0
+                verdict = "evict"
+        else:
+            # healthy steps decay strikes and update the EWMA
+            self.strikes[host] = max(0, self.strikes.get(host, 0) - 1)
+            self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * duration_s
+        return verdict
+
+    def deadline(self) -> Optional[float]:
+        return None if self.ewma is None else self.threshold * self.ewma

@@ -1,0 +1,46 @@
+import os
+import sys
+
+# Tests see the default single CPU device (the dry-run sets its own flags in
+# a separate process).  Keep XLA quiet and single-threaded-friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import DFRConfig, DFRParams, TimeSeriesBatch
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    return DFRConfig(n_in=3, n_classes=4, n_nodes=8, nonlinearity="tanh")
+
+
+@pytest.fixture(scope="session")
+def small_batch(rng):
+    b, t, v = 12, 20, 3
+    u = rng.normal(size=(b, t, v)).astype(np.float32)
+    lengths = rng.integers(5, t + 1, b).astype(np.int32)
+    labels = (np.arange(b) % 4).astype(np.int32)
+    for i in range(b):
+        u[i, lengths[i]:] = 0.0
+    return TimeSeriesBatch(
+        u=jnp.asarray(u), length=jnp.asarray(lengths), label=jnp.asarray(labels)
+    )
+
+
+@pytest.fixture(scope="session")
+def spd_system(rng):
+    """(A, B) with B guaranteed SPD, paper-scale-ish s."""
+    s, n_y, n_train = 57, 5, 300
+    R = rng.normal(size=(s, n_train)).astype(np.float32)
+    B = R @ R.T + 0.05 * np.eye(s, dtype=np.float32)
+    A = rng.normal(size=(n_y, s)).astype(np.float32)
+    return jnp.asarray(A), jnp.asarray(B)

@@ -1,0 +1,99 @@
+"""Backprop: manual truncated Eq. 33-36 == autodiff; Table 7 storage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backprop as bp
+from repro.core.types import DFRConfig, DFRParams
+
+
+def _setup(batched=True, nx=6, ny=4, t=9, seed=0):
+    cfg = DFRConfig(n_in=3, n_classes=ny, n_nodes=nx, nonlinearity="tanh")
+    key = jax.random.PRNGKey(seed)
+    params = DFRParams(
+        p=jnp.float32(0.15), q=jnp.float32(0.45),
+        W=0.05 * jax.random.normal(key, (ny, cfg.n_rep)),
+        b=0.01 * jnp.ones(ny),
+    )
+    shape = (2, t, nx) if batched else (t, nx)
+    j_seq = jax.random.normal(jax.random.PRNGKey(seed + 1), shape)
+    labels = jnp.asarray([1, 3][: (2 if batched else 1)])
+    onehot = jax.nn.one_hot(labels if batched else labels[0], ny)
+    return cfg, params, j_seq, onehot
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_manual_equals_autodiff_truncated(batched):
+    cfg, params, j_seq, onehot = _setup(batched)
+    f = cfg.f()
+    fp = lambda z: 1 - jnp.tanh(z) ** 2
+    l1, g1 = bp.grads_truncated_manual(params, j_seq, onehot, f, fp)
+    l2, g2 = bp.grads_truncated(params, j_seq, onehot, f)
+    assert float(abs(l1 - l2)) < 1e-5
+    for name in ("p", "q", "W", "b"):
+        a, b_ = np.asarray(getattr(g1, name)), np.asarray(getattr(g2, name))
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_manual_equals_autodiff_with_lengths():
+    cfg, params, j_seq, onehot = _setup(batched=True)
+    lengths = jnp.asarray([5, 9], jnp.int32)
+    f = cfg.f()
+    fp = lambda z: 1 - jnp.tanh(z) ** 2
+    l1, g1 = bp.grads_truncated_manual(params, j_seq, onehot, f, fp, lengths)
+    l2, g2 = bp.grads_truncated(params, j_seq, onehot, f, lengths)
+    for name in ("p", "q", "W", "b"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(g1, name)), np.asarray(getattr(g2, name)),
+            rtol=1e-4, atol=1e-5, err_msg=name,
+        )
+
+
+def test_truncated_output_layer_grads_equal_full():
+    """Truncation only affects (p, q): W/b grads must match full BPTT."""
+    cfg, params, j_seq, onehot = _setup(batched=True)
+    f = cfg.f()
+    _, gt = bp.grads_truncated(params, j_seq, onehot, f)
+    _, gf = bp.grads_full_bptt(params, j_seq, onehot, f)
+    np.testing.assert_allclose(np.asarray(gt.W), np.asarray(gf.W), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gt.b), np.asarray(gf.b), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_truncated_pq_grads_correlate_with_full():
+    """The approximation keeps the descent direction (same sign, similar
+    scale) for stable reservoirs - the property the paper relies on."""
+    agree = 0
+    for seed in range(6):
+        cfg, params, j_seq, onehot = _setup(batched=True, t=16, seed=seed)
+        f = cfg.f()
+        _, gt = bp.grads_truncated(params, j_seq, onehot, f)
+        _, gf = bp.grads_full_bptt(params, j_seq, onehot, f)
+        if np.sign(float(gt.p)) == np.sign(float(gf.p)):
+            agree += 1
+    assert agree >= 4
+
+
+def test_storage_words_table7():
+    """Naive grows with T; truncated is T-independent; >= 50% cut at T=500."""
+    cfg = DFRConfig(n_in=5, n_classes=3, n_nodes=30)
+    t = 500
+    naive = bp.storage_words_naive(cfg, t)
+    trunc = bp.storage_words_truncated(cfg, t)
+    assert trunc < naive
+    assert bp.storage_words_truncated(cfg, 10_000) == trunc
+    assert (naive - trunc) / naive > 0.5
+    # reservoir-state storage alone drops to 2/(T+1) (paper: <2% for T>100)
+    assert 2 * cfg.n_nodes / ((t + 1) * cfg.n_nodes) < 0.02
+
+
+def test_apply_sgd_clamps_to_paper_box():
+    cfg, params, j_seq, onehot = _setup()
+    g = DFRParams(p=jnp.float32(-100.0), q=jnp.float32(100.0),
+                  W=jnp.zeros_like(params.W), b=jnp.zeros_like(params.b))
+    new = bp.apply_sgd(params, g, 1.0, 1.0, grad_clip=None)
+    eps = 1e-6  # f32 rounding of the box bounds
+    assert bp.P_RANGE[0] - eps <= float(new.p) <= bp.P_RANGE[1] + eps
+    assert bp.Q_RANGE[0] - eps <= float(new.q) <= bp.Q_RANGE[1] + eps

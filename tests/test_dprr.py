@@ -1,0 +1,50 @@
+"""DPRR = the paper's Eq. 27/28 sums, computed as a GEMM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dprr
+
+
+def manual_dprr(x, length=None):
+    t, nx = x.shape
+    t_eff = int(length) if length is not None else t
+    r_outer = np.zeros((nx, nx))
+    r_sum = np.zeros(nx)
+    xprev = np.zeros(nx)
+    for k in range(t_eff):
+        xk = np.asarray(x[k])
+        r_outer += np.outer(xk, xprev)
+        r_sum += xk
+        xprev = xk
+    return np.concatenate([r_outer.reshape(-1), r_sum])
+
+
+def test_matches_paper_sums():
+    x = jax.random.normal(jax.random.PRNGKey(0), (9, 5))
+    got = np.asarray(dprr.compute_dprr(x))
+    np.testing.assert_allclose(got, manual_dprr(x), rtol=1e-5, atol=1e-5)
+
+
+def test_lengths_mask():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 11, 4))
+    lengths = jnp.asarray([11, 3, 7], jnp.int32)
+    got = np.asarray(dprr.compute_dprr(x, lengths=lengths))
+    for b in range(3):
+        np.testing.assert_allclose(
+            got[b], manual_dprr(x[b], int(lengths[b])), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_r_tilde_appends_one():
+    r = jnp.ones((2, 6))
+    rt = dprr.r_tilde(r)
+    assert rt.shape == (2, 7)
+    assert float(rt[0, -1]) == 1.0
+
+
+def test_shifted_states_zero_prefix():
+    x = jnp.arange(12.0).reshape(4, 3)
+    x0 = dprr.shifted_states(x)
+    assert float(jnp.sum(jnp.abs(x0[0]))) == 0.0
+    np.testing.assert_allclose(np.asarray(x0[1:]), np.asarray(x[:-1]))

@@ -1,0 +1,107 @@
+"""RWKV6 / Mamba2-SSD: chunked-parallel scan == sequential recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import rwkv as rw
+from repro.models import ssm
+
+
+def sequential_rwkv(r, k, v, w, bonus, s0):
+    """Token-by-token reference of the RWKV6 recurrence."""
+    b, t, h, d = r.shape
+    s = np.asarray(s0, np.float64)
+    outs = np.zeros((b, t, h, d))
+    rn, kn, vn, wn = (np.asarray(a, np.float64) for a in (r, k, v, w))
+    bn = np.asarray(bonus, np.float64)
+    for ti in range(t):
+        kv = np.einsum("bhd,bhe->bhde", kn[:, ti], vn[:, ti])
+        outs[:, ti] = np.einsum("bhd,bhde->bhe", rn[:, ti] * bn[None], kv) + \
+            np.einsum("bhd,bhde->bhe", rn[:, ti], s)
+        s = wn[:, ti][..., None] * s + kv
+    return outs, s
+
+
+@pytest.mark.parametrize("t,chunk", [(32, 8), (48, 16), (16, 16)])
+def test_rwkv_chunked_matches_sequential(t, chunk):
+    rng = np.random.default_rng(t)
+    b, h, d = 2, 3, 8
+    r = jnp.asarray(rng.normal(size=(b, t, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, t, h, d)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, t, h, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 0.99, size=(b, t, h, d)).astype(np.float32))
+    bonus = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32)) * 0.1
+    s0 = jnp.zeros((b, h, d, d))
+    got, s_got = rw.rwkv_attention_chunked(r, k, v, w, bonus, s0, chunk=chunk)
+    want, s_want = sequential_rwkv(r, k, v, w, bonus, s0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_got), s_want, rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_decode_consistent_with_chunked():
+    """Running T steps of decode == chunked block over the same tokens."""
+    rng = np.random.default_rng(0)
+    b, t, h, d = 1, 6, 2, 4
+    r = jnp.asarray(rng.normal(size=(b, t, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, t, h, d)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, t, h, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.6, 0.95, size=(b, t, h, d)).astype(np.float32))
+    bonus = jnp.zeros((h, d))
+    s0 = jnp.zeros((b, h, d, d))
+    chunked, s_c = rw.rwkv_attention_chunked(r, k, v, w, bonus, s0, chunk=t)
+    seq, s_s = sequential_rwkv(r, k, v, w, bonus, s0)
+    np.testing.assert_allclose(np.asarray(chunked), seq, rtol=2e-3, atol=2e-3)
+
+
+def sequential_ssd(xh, a_log, bm, cm, s0):
+    b, t, h, p = xh.shape
+    n = bm.shape[-1]
+    s = np.asarray(s0, np.float64)
+    ys = np.zeros((b, t, h, p))
+    xn, an, bn, cn = (np.asarray(v, np.float64) for v in (xh, a_log, bm, cm))
+    for ti in range(t):
+        s = np.exp(an[:, ti])[..., None, None] * s + np.einsum(
+            "bn,bhp->bhnp", bn[:, ti], xn[:, ti]
+        )
+        ys[:, ti] = np.einsum("bn,bhnp->bhp", cn[:, ti], s)
+    return ys, s
+
+
+@pytest.mark.parametrize("t,chunk", [(32, 8), (24, 24)])
+def test_ssd_chunked_matches_sequential(t, chunk):
+    rng = np.random.default_rng(t)
+    b, h, p, n = 2, 2, 4, 6
+    xh = jnp.asarray(rng.normal(size=(b, t, h, p)).astype(np.float32))
+    a_log = jnp.asarray(-rng.uniform(0.01, 0.5, size=(b, t, h)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(b, t, n)).astype(np.float32)) * 0.4
+    cm = jnp.asarray(rng.normal(size=(b, t, n)).astype(np.float32))
+    s0 = jnp.zeros((b, h, n, p))
+    got, s_got = ssm.ssd_chunked(xh, a_log, bm, cm, s0, chunk=chunk)
+    want, s_want = sequential_ssd(xh, a_log, bm, cm, s0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_got), s_want, rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_block_decode_matches_prefill():
+    """One ssm_block_apply over T tokens == T single-token applies."""
+    key = jax.random.PRNGKey(0)
+    d, t, b = 32, 8, 1
+    p = ssm.ssm_block_init(key, d, ssm_state=8, head_dim=16, expand=2,
+                           dtype=jnp.float32)
+    vals = jax.tree_util.tree_map(
+        lambda pv: pv.value, p, is_leaf=lambda x: hasattr(x, "axes")
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, d)) * 0.5
+    st0 = ssm.ssm_state_init(b, d, 8, 16, 2)
+    full, _ = ssm.ssm_block_apply(vals, x, st0, ssm_state=8, head_dim=16,
+                                  expand=2, chunk=t)
+    st = ssm.ssm_state_init(b, d, 8, 16, 2)
+    outs = []
+    for ti in range(t):
+        o, st = ssm.ssm_block_apply(vals, x[:, ti:ti+1], st, ssm_state=8,
+                                    head_dim=16, expand=2, chunk=1)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), rtol=5e-3,
+                               atol=5e-3)

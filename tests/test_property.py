@@ -1,0 +1,108 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dprr, reservoir, ridge
+from repro.optim.compression import compress_int8, decompress_int8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    s=st.integers(2, 24),
+    ny=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+    beta=st.floats(1e-4, 10.0),
+)
+@settings(**SETTINGS)
+def test_ridge_solves_the_normal_equations(s, ny, seed, beta):
+    """W B == A for every SPD B (the defining property of Eq. 23)."""
+    rng = np.random.default_rng(seed)
+    R = rng.normal(size=(s, s + 8)).astype(np.float32)
+    B = jnp.asarray(R @ R.T + beta * np.eye(s, dtype=np.float32))
+    A = jnp.asarray(rng.normal(size=(ny, s)).astype(np.float32))
+    W = ridge.ridge_cholesky_packed(A, B)
+    resid = np.asarray(W @ B - A)
+    assert np.max(np.abs(resid)) / (np.max(np.abs(np.asarray(A))) + 1e-6) < 5e-2
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    scale=st.floats(0.1, 3.0),
+    nx=st.integers(2, 16),
+    t=st.integers(1, 24),
+)
+@settings(**SETTINGS)
+def test_reservoir_linear_f_is_homogeneous(seed, scale, nx, t):
+    """With f linear, states are linear in the input stream."""
+    key = jax.random.PRNGKey(seed)
+    j = jax.random.normal(key, (t, nx))
+    p, q = jnp.float32(0.2), jnp.float32(0.5)
+    x1 = reservoir.run_reservoir(p, q, j)
+    x2 = reservoir.run_reservoir(p, q, scale * j)
+    np.testing.assert_allclose(np.asarray(x2), scale * np.asarray(x1),
+                               rtol=5e-3, atol=5e-4)
+
+
+@given(seed=st.integers(0, 10_000), nx=st.integers(2, 12), t=st.integers(2, 20))
+@settings(**SETTINGS)
+def test_dprr_additive_in_time(seed, nx, t):
+    """r(T) - r(T-1 prefix) == the last outer-product contribution."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, nx))
+    full = np.asarray(dprr.compute_dprr(x))
+    prefix = np.asarray(dprr.compute_dprr(x[:-1]))
+    last = np.outer(np.asarray(x[-1]), np.asarray(x[-2]) if t > 1 else np.zeros(nx))
+    delta = np.concatenate([last.reshape(-1), np.asarray(x[-1])])
+    np.testing.assert_allclose(full - prefix, delta, rtol=1e-3, atol=1e-4)
+
+
+@given(s=st.integers(1, 40))
+@settings(**SETTINGS)
+def test_packed_index_bijection(s):
+    """The paper's 1-D packing P[i(i+1)/2+j] is a bijection on the lower
+    triangle."""
+    seen = set()
+    for i in range(s):
+        for j in range(i + 1):
+            idx = ridge.packed_index(i, j)
+            assert 0 <= idx < ridge.packed_size(s)
+            assert idx not in seen
+            seen.add(idx)
+    assert len(seen) == ridge.packed_size(s)
+
+
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+@settings(**SETTINGS)
+def test_int8_compression_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray((rng.normal(size=(64,)) * scale).astype(np.float32))
+    q, s = compress_int8(g)
+    back = decompress_int8(q, s)
+    err = np.max(np.abs(np.asarray(back - g)))
+    assert err <= float(s) * 0.5 + 1e-9  # half-ULP of the quantizer
+
+
+@given(
+    seed=st.integers(0, 1000),
+    ny=st.integers(2, 5),
+    n=st.integers(4, 30),
+)
+@settings(**SETTINGS)
+def test_ab_accumulation_is_order_invariant(seed, ny, n):
+    """Eq. 38: (A, B) are associative sums => any chunking/order agrees
+    (the property that makes the distributed psum exact)."""
+    rng = np.random.default_rng(seed)
+    s = 9
+    rt = jnp.asarray(rng.normal(size=(n, s)).astype(np.float32))
+    oh = jax.nn.one_hot(jnp.asarray(rng.integers(0, ny, n)), ny)
+    A1 = jnp.zeros((ny, s)); B1 = jnp.zeros((s, s))
+    A1, B1 = ridge.accumulate_ab(A1, B1, rt, oh)
+    perm = rng.permutation(n)
+    A2 = jnp.zeros((ny, s)); B2 = jnp.zeros((s, s))
+    for i in perm:
+        A2, B2 = ridge.accumulate_ab(A2, B2, rt[i:i+1], oh[i:i+1])
+    np.testing.assert_allclose(np.asarray(A1), np.asarray(A2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(B1), np.asarray(B2), rtol=1e-3, atol=1e-3)

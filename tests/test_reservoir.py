@@ -1,0 +1,70 @@
+"""Reservoir forward: GEMM closed form == paper-faithful per-node loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reservoir as res
+
+
+@pytest.mark.parametrize("q", [0.0, 0.3, -0.4, 0.95])
+def test_ring_matrix_closed_form(q):
+    n = 6
+    L = np.asarray(res.ring_matrix(jnp.float32(q), n))
+    for i in range(n):
+        for j in range(n):
+            expect = q ** (i - j) if i >= j else 0.0
+            assert np.allclose(L[i, j], expect, atol=1e-6), (i, j)
+
+
+@pytest.mark.parametrize("f_name", ["linear", "tanh", "mg"])
+def test_gemm_step_matches_naive(f_name):
+    f = {
+        "linear": lambda z: z,
+        "tanh": jnp.tanh,
+        "mg": lambda z: z / (1 + jnp.abs(z) ** 2),
+    }[f_name]
+    key = jax.random.PRNGKey(0)
+    nx, t = 9, 13
+    j_seq = jax.random.normal(key, (t, nx))
+    p, q = jnp.float32(0.2), jnp.float32(0.55)
+    xp = jnp.zeros(nx)
+    naive = []
+    for k in range(t):
+        xp = res.reservoir_step_naive(p, q, f, j_seq[k], xp)
+        naive.append(xp)
+    naive = jnp.stack(naive)
+    gemm = res.run_reservoir(p, q, j_seq, f=f)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(gemm), rtol=2e-5,
+                               atol=2e-6)
+
+
+def test_batched_matches_single():
+    key = jax.random.PRNGKey(1)
+    j = jax.random.normal(key, (4, 11, 7))
+    p, q = jnp.float32(0.1), jnp.float32(0.4)
+    batched = res.run_reservoir(p, q, j, f=jnp.tanh)
+    for b in range(4):
+        single = res.run_reservoir(p, q, j[b], f=jnp.tanh)
+        np.testing.assert_allclose(np.asarray(batched[b]), np.asarray(single),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_lengths_freeze_state():
+    key = jax.random.PRNGKey(2)
+    j = jax.random.normal(key, (2, 10, 5))
+    lengths = jnp.asarray([4, 10], jnp.int32)
+    x = res.run_reservoir(jnp.float32(0.2), jnp.float32(0.3), j, f=jnp.tanh,
+                          lengths=lengths)
+    # after t >= length the state must stay frozen at x(T)
+    np.testing.assert_allclose(np.asarray(x[0, 3]), np.asarray(x[0, 9]))
+    assert not np.allclose(np.asarray(x[1, 3]), np.asarray(x[1, 9]))
+
+
+def test_legacy_digital_dfr_runs():
+    key = jax.random.PRNGKey(3)
+    j = jax.random.normal(key, (12, 6))
+    f = lambda x, jj: 0.8 * (x + jj) / (1 + jnp.abs(x + jj) ** 2)
+    x = res.run_reservoir_legacy(jnp.float32(0.8), jnp.float32(1.0), 0.2, j, f)
+    assert x.shape == (12, 6)
+    assert bool(jnp.all(jnp.isfinite(x)))
