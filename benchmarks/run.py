@@ -26,17 +26,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="all 12 datasets at full Table-4 sizes (slow)")
     ap.add_argument("--only", default=None,
-                    help="comma list: ridge,backprop,truncation,system,roofline")
+                    help="comma list: ridge,backprop,truncation,system,"
+                         "population,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (bench_backprop, bench_ridge, bench_system,
-                            bench_truncation, roofline)
+    from benchmarks import (bench_backprop, bench_population, bench_ridge,
+                            bench_system, bench_truncation, roofline)
 
     suites = {
         "ridge": lambda: bench_ridge.run(args.full),
         "backprop": lambda: bench_backprop.run(args.full),
         "truncation": lambda: bench_truncation.run(args.full),
         "system": lambda: bench_system.run(args.full),
+        "population": lambda: bench_population.run(args.full),
         "roofline": lambda: roofline.summary_csv(),
     }
     selected = (args.only.split(",") if args.only else list(suites))

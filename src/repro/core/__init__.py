@@ -5,6 +5,7 @@ Public API surface; see DESIGN.md for the paper-to-module map.
 from repro.core.types import (  # noqa: F401
     DFRConfig,
     DFRParams,
+    RegressionBatch,
     RidgeState,
     TimeSeriesBatch,
 )
@@ -19,9 +20,11 @@ from repro.core.reservoir import (  # noqa: F401
 from repro.core.dprr import compute_dprr, r_tilde, shifted_states  # noqa: F401
 from repro.core.ridge import (  # noqa: F401
     ridge_solve,
+    ridge_solve_batched,
     ridge_gaussian,
     ridge_cholesky_packed,
     ridge_cholesky_blocked,
+    ridge_cholesky_batched,
     accumulate_ab,
     regularize,
 )
@@ -35,4 +38,20 @@ from repro.core.backprop import (  # noqa: F401
 from repro.core.dfr import DFRModel  # noqa: F401
 from repro.core.online import OnlineDFR, OnlineState  # noqa: F401
 from repro.core.readout import DistributedDFRReadout, ReadoutConfig  # noqa: F401
-from repro.core.grid_search import grid_search, grid_search_until  # noqa: F401
+from repro.core.population import (  # noqa: F401
+    PopulationEval,
+    PopulationResult,
+    cull_population,
+    evaluate_population,
+    grid_candidates,
+    init_population,
+    refine_population,
+    train_population,
+    train_population_classification,
+    train_population_regression,
+)
+from repro.core.grid_search import (  # noqa: F401
+    grid_search,
+    grid_search_serial,
+    grid_search_until,
+)

@@ -40,6 +40,17 @@ def loss_from_logits(logits: Array, onehot: Array) -> Array:
     return -jnp.sum(onehot * logp, axis=-1)
 
 
+def loss_mse(logits: Array, targets: Array) -> Array:
+    """Squared-error loss for regression readouts (population engine).
+
+    0.5 * ||logits - targets||^2 per sample, so dL/dlogits = logits - targets
+    mirrors the cross-entropy case's (probs - onehot) in Eq. 25 and the same
+    truncated-BP machinery applies unchanged.
+    """
+    d = logits - targets
+    return 0.5 * jnp.sum(d * d, axis=-1)
+
+
 def forward(
     params: DFRParams,
     j_seq: Array,
@@ -156,6 +167,7 @@ def _truncated_loss(
     onehot: Array,
     f: Callable[[Array], Array],
     lengths: Optional[Array] = None,
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
 ) -> Array:
     sg = jax.lax.stop_gradient
     aux = forward(params, j_seq, f, lengths)
@@ -180,7 +192,7 @@ def _truncated_loss(
     r = sg(aux.r) + jnp.concatenate([delta_outer, delta_sum], axis=-1)
 
     logits = r @ params.W.T + params.b
-    return jnp.sum(loss_from_logits(logits, onehot))
+    return jnp.sum(loss_fn(logits, onehot))
 
 
 def grads_truncated(
@@ -189,8 +201,13 @@ def grads_truncated(
     onehot: Array,
     f: Callable[[Array], Array],
     lengths: Optional[Array] = None,
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
 ) -> Tuple[Array, DFRParams]:
-    loss, g = jax.value_and_grad(_truncated_loss)(params, j_seq, onehot, f, lengths)
+    """Truncated-BP gradients; ``loss_fn`` selects the readout objective
+    (cross-entropy default; ``loss_mse`` for regression populations)."""
+    loss, g = jax.value_and_grad(_truncated_loss)(
+        params, j_seq, onehot, f, lengths, loss_fn
+    )
     return loss, g
 
 
@@ -205,9 +222,10 @@ def _full_loss(
     onehot: Array,
     f: Callable[[Array], Array],
     lengths: Optional[Array] = None,
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
 ) -> Array:
     aux = forward(params, j_seq, f, lengths)
-    return jnp.sum(loss_from_logits(aux.logits, onehot))
+    return jnp.sum(loss_fn(aux.logits, onehot))
 
 
 def grads_full_bptt(
@@ -216,8 +234,11 @@ def grads_full_bptt(
     onehot: Array,
     f: Callable[[Array], Array],
     lengths: Optional[Array] = None,
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
 ) -> Tuple[Array, DFRParams]:
-    loss, g = jax.value_and_grad(_full_loss)(params, j_seq, onehot, f, lengths)
+    loss, g = jax.value_and_grad(_full_loss)(
+        params, j_seq, onehot, f, lengths, loss_fn
+    )
     return loss, g
 
 

@@ -371,6 +371,43 @@ def ridge_solve(A: Array, B: Array, method: str = "cholesky_blocked") -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Population-axis (batched) solves: one factorization per population member,
+# all in a single XLA program.  These back the vmapped hyperparameter engine
+# (repro.core.population); the Pallas tile pipeline has a matching batched
+# driver in repro.kernels.ridge_solve.ridge_solve_blocked_batched.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def ridge_cholesky_batched(A: Array, B: Array) -> Array:
+    """Batched ridge solve:  A (K, Ny, s), B (K, s, s)  ->  W~ (K, Ny, s).
+
+    Same math as ``ridge_cholesky_blocked`` per member (Cholesky + two
+    triangular solves, no inverse materialized), with the population axis K
+    handled by the batched LAPACK/XLA primitives.
+    """
+    C = jnp.linalg.cholesky(B)  # (K, s, s), natively batched
+
+    def _member(c: Array, a: Array) -> Array:
+        d = jax.scipy.linalg.solve_triangular(c, a.T, lower=True).T
+        return jax.scipy.linalg.solve_triangular(c.T, d.T, lower=False).T
+
+    return jax.vmap(_member)(C, A)
+
+
+def ridge_solve_batched(A: Array, B: Array, method: str = "cholesky_blocked") -> Array:
+    """Population-axis dispatch mirroring ``ridge_solve``.
+
+    A: (K, Ny, s), B: (K, s, s) -> (K, Ny, s).
+    """
+    if method == "cholesky_blocked":
+        return ridge_cholesky_batched(A, B)
+    if method == "gaussian":
+        return jax.vmap(ridge_gaussian)(A, B)
+    raise ValueError(f"unknown batched ridge method: {method}")
+
+
+# ---------------------------------------------------------------------------
 # Streaming sufficient statistics (paper Eq. 21-22, 38).
 # ---------------------------------------------------------------------------
 
@@ -386,7 +423,8 @@ def accumulate_ab(A: Array, B: Array, r_tilde: Array, onehot: Array) -> Tuple[Ar
 
 
 def regularize(B: Array, beta: Array) -> Array:
-    return B + beta * jnp.eye(B.shape[0], dtype=B.dtype)
+    """B + beta I, broadcasting over any leading (population) axes."""
+    return B + beta * jnp.eye(B.shape[-1], dtype=B.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -150,6 +150,32 @@ class RidgeState:
 
 
 @dataclasses.dataclass(frozen=True)
+class RegressionBatch:
+    """A padded batch of input series with continuous targets.
+
+    The population engine (``repro.core.population``) optimizes NRMSE on
+    batches of this shape for sequence-regression tasks (e.g. the NARMA10
+    benchmark in ``repro.data.timeseries.make_narma10``).
+
+    u:       (B, T_max, n_in) float inputs, zero padded past `length`.
+    length:  (B,) int32 true lengths  (1 <= length <= T_max).
+    y:       (B, n_out) float regression targets (one vector per sequence).
+    """
+
+    u: Array
+    length: Array
+    y: Array
+
+    @property
+    def batch(self) -> int:
+        return self.u.shape[0]
+
+    @property
+    def t_max(self) -> int:
+        return self.u.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
 class TimeSeriesBatch:
     """A padded batch of variable-length multivariate time series.
 

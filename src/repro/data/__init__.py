@@ -3,4 +3,6 @@ from repro.data.timeseries import (  # noqa: F401
     DatasetSpec,
     load,
     make_dataset,
+    make_narma10,
+    narma10_series,
 )

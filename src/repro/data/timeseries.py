@@ -21,7 +21,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core.types import TimeSeriesBatch
+from repro.core.types import RegressionBatch, TimeSeriesBatch
 
 import jax.numpy as jnp
 
@@ -141,3 +141,61 @@ def make_dataset(
 def load(name: str, seed: int = 0, size_cap: int | None = None):
     """Load a paper dataset by Table 4 name (synthetic; see module doc)."""
     return make_dataset(PAPER_DATASETS[name.upper()], seed=seed, size_cap=size_cap)
+
+
+# ---------------------------------------------------------------------------
+# NARMA10: the standard reservoir-computing regression benchmark (used by the
+# population engine's NRMSE fitness and its tests).
+# ---------------------------------------------------------------------------
+
+
+def narma10_series(n_steps: int, seed: int = 0, order: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+    """One NARMA-``order`` input/output sequence.
+
+        y(t+1) = 0.3 y(t) + 0.05 y(t) sum_{i=0..9} y(t-i)
+                 + 1.5 u(t-9) u(t) + 0.1,    u(t) ~ U[0, 0.5]
+
+    Returns (u, y), both (n_steps,) float32.  The recurrence is run with
+    zero history for t < order (the usual washout convention).
+    """
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(0.0, 0.5, n_steps).astype(np.float64)
+    y = np.zeros(n_steps, np.float64)
+    for t in range(n_steps - 1):
+        window = y[max(0, t - order + 1): t + 1].sum()
+        y[t + 1] = (0.3 * y[t] + 0.05 * y[t] * window
+                    + 1.5 * u[max(0, t - order + 1)] * u[t] + 0.1)
+    return u.astype(np.float32), y.astype(np.float32)
+
+
+def make_narma10(
+    n_train: int = 200,
+    n_test: int = 100,
+    t_len: int = 32,
+    seed: int = 0,
+    order: int = 10,
+) -> Tuple[RegressionBatch, RegressionBatch]:
+    """NARMA10 framed as sequence -> scalar regression for the DFR pipeline.
+
+    Overlapping windows of length ``t_len`` are cut from one long series;
+    each window's target is the NARMA output aligned with its last input
+    step.  Train windows precede test windows in time, with a ``t_len``-step
+    gap between the last train window and the first test window so no test
+    window shares any input step (or adjacent target) with a train window.
+    """
+    n_total = n_train + n_test
+    u, y = narma10_series(order + n_total + 2 * t_len, seed=seed, order=order)
+    starts = order + np.arange(n_total)
+    starts[n_train:] += t_len  # leakage gap between the splits
+    uw = np.stack([u[s: s + t_len] for s in starts])[..., None]  # (B, T, 1)
+    yw = y[starts + t_len - 1][:, None]                          # (B, 1)
+    lengths = np.full(n_total, t_len, np.int32)
+
+    def split(lo: int, hi: int) -> RegressionBatch:
+        return RegressionBatch(
+            u=jnp.asarray(uw[lo:hi].astype(np.float32)),
+            length=jnp.asarray(lengths[lo:hi]),
+            y=jnp.asarray(yw[lo:hi].astype(np.float32)),
+        )
+
+    return split(0, n_train), split(n_train, n_total)

@@ -34,9 +34,8 @@ from jax.experimental.pallas import tpu as pltpu
 # ---------------------------------------------------------------------------
 
 
-def _chol_block_kernel(a_ref, o_ref):
-    """Factor one (bs, bs) SPD tile: o = L with A = L L^T (lower)."""
-    a = a_ref[...]
+def _chol_tile(a: jax.Array) -> jax.Array:
+    """Factor one (bs, bs) SPD tile: returns L with A = L L^T (lower)."""
     n = a.shape[0]
     ridx = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
     cidx = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
@@ -52,7 +51,16 @@ def _chol_block_kernel(a_ref, o_ref):
         return a - below[:, None] * below[None, :]
 
     a = jax.lax.fori_loop(0, n, body, a)
-    o_ref[...] = jnp.where(ridx >= cidx, a, 0.0)
+    return jnp.where(ridx >= cidx, a, 0.0)
+
+
+def _chol_block_kernel(a_ref, o_ref):
+    o_ref[...] = _chol_tile(a_ref[...])
+
+
+def _chol_block_batched_kernel(a_ref, o_ref):
+    # refs carry one population member per grid step: (1, bs, bs)
+    o_ref[0] = _chol_tile(a_ref[0])
 
 
 def chol_block(a: jax.Array, *, interpret: bool = False) -> jax.Array:
@@ -67,15 +75,31 @@ def chol_block(a: jax.Array, *, interpret: bool = False) -> jax.Array:
     )(a)
 
 
+def chol_block_batched(a: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Population-axis tile Cholesky: a (K, bs, bs) -> L (K, bs, bs).
+
+    One grid step per member; each factors its own VMEM tile, so the K
+    independent factorizations of the population engine pipeline through
+    the core without host round-trips.
+    """
+    k, bs, _ = a.shape
+    return pl.pallas_call(
+        _chol_block_batched_kernel,
+        grid=(k,),
+        out_shape=jax.ShapeDtypeStruct((k, bs, bs), a.dtype),
+        in_specs=[pl.BlockSpec((1, bs, bs), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, bs, bs), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(a)
+
+
 # ---------------------------------------------------------------------------
 # Tile TRSMs (rows of the right-hand side are gridded; L stays resident)
 # ---------------------------------------------------------------------------
 
 
-def _trsm_lower_t_kernel(a_ref, l_ref, x_ref):
+def _trsm_lower_t_tile(a: jax.Array, L: jax.Array) -> jax.Array:
     """Solve X L^T = A for one (bm, bs) row block: forward over columns."""
-    a = a_ref[...]
-    L = l_ref[...]
     n = L.shape[0]
 
     def body(j, x):
@@ -84,14 +108,11 @@ def _trsm_lower_t_kernel(a_ref, l_ref, x_ref):
         val = (a[:, j] - dot) / L[j, j]
         return x.at[:, j].set(val)
 
-    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
-    x_ref[...] = x
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
 
 
-def _trsm_lower_kernel(d_ref, l_ref, x_ref):
+def _trsm_lower_tile(d: jax.Array, L: jax.Array) -> jax.Array:
     """Solve X L = D for one (bm, bs) row block: backward over columns."""
-    d = d_ref[...]
-    L = l_ref[...]
     n = L.shape[0]
 
     def body(t, x):
@@ -100,8 +121,23 @@ def _trsm_lower_kernel(d_ref, l_ref, x_ref):
         val = (d[:, j] - dot) / L[j, j]
         return x.at[:, j].set(val)
 
-    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(d))
-    x_ref[...] = x
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(d))
+
+
+def _trsm_lower_t_kernel(a_ref, l_ref, x_ref):
+    x_ref[...] = _trsm_lower_t_tile(a_ref[...], l_ref[...])
+
+
+def _trsm_lower_kernel(d_ref, l_ref, x_ref):
+    x_ref[...] = _trsm_lower_tile(d_ref[...], l_ref[...])
+
+
+def _trsm_lower_t_batched_kernel(a_ref, l_ref, x_ref):
+    x_ref[0] = _trsm_lower_t_tile(a_ref[0], l_ref[0])
+
+
+def _trsm_lower_batched_kernel(d_ref, l_ref, x_ref):
+    x_ref[0] = _trsm_lower_tile(d_ref[0], l_ref[0])
 
 
 def _trsm_call(kernel, rhs: jax.Array, L: jax.Array, block_m: int, interpret: bool):
@@ -120,6 +156,23 @@ def _trsm_call(kernel, rhs: jax.Array, L: jax.Array, block_m: int, interpret: bo
     )(rhs, L)
 
 
+def _trsm_call_batched(kernel, rhs: jax.Array, L: jax.Array, block_m: int,
+                       interpret: bool):
+    k, m, n = rhs.shape
+    assert m % block_m == 0, (m, block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(k, m // block_m),
+        out_shape=jax.ShapeDtypeStruct((k, m, n), rhs.dtype),
+        in_specs=[
+            pl.BlockSpec((1, block_m, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, n, n), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, n), lambda b, i: (b, i, 0)),
+        interpret=interpret,
+    )(rhs, L)
+
+
 def trsm_lower_t(a: jax.Array, L: jax.Array, *, block_m: int = 128,
                  interpret: bool = False) -> jax.Array:
     """X L^T = a;  a: (m, bs), L: (bs, bs) lower-triangular."""
@@ -130,3 +183,15 @@ def trsm_lower(d: jax.Array, L: jax.Array, *, block_m: int = 128,
                interpret: bool = False) -> jax.Array:
     """X L = d;  d: (m, bs), L: (bs, bs) lower-triangular."""
     return _trsm_call(_trsm_lower_kernel, d, L, block_m, interpret)
+
+
+def trsm_lower_t_batched(a: jax.Array, L: jax.Array, *, block_m: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """Population-axis X L^T = a;  a: (K, m, bs), L: (K, bs, bs)."""
+    return _trsm_call_batched(_trsm_lower_t_batched_kernel, a, L, block_m, interpret)
+
+
+def trsm_lower_batched(d: jax.Array, L: jax.Array, *, block_m: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Population-axis X L = d;  d: (K, m, bs), L: (K, bs, bs)."""
+    return _trsm_call_batched(_trsm_lower_batched_kernel, d, L, block_m, interpret)

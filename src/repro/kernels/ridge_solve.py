@@ -21,7 +21,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cholesky import chol_block, trsm_lower, trsm_lower_t
+from repro.kernels.cholesky import (
+    chol_block,
+    chol_block_batched,
+    trsm_lower,
+    trsm_lower_batched,
+    trsm_lower_t,
+    trsm_lower_t_batched,
+)
 
 
 def _pad_spd(B: jax.Array, block: int):
@@ -119,3 +126,131 @@ def ridge_solve_blocked(A: jax.Array, B: jax.Array, *, block: int = 256,
     C = cholesky_blocked(B, block=block, interpret=interpret)
     D = trsm_blocked_lower_t(A, C, block=block, interpret=interpret)
     return trsm_blocked_lower(D, C, block=block, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Population-axis (batched) drivers.  Same blocked schedule as above with a
+# leading K axis on every tile: the K independent systems of the population
+# engine (repro.core.population) factor/solve in one program, each tile
+# kernel gridded over the members (kernels/cholesky.py *_batched variants).
+#
+# jax.vmap over the unbatched driver lifts to an equivalent program (vmap of
+# pallas_call prepends a grid axis); the explicit grid form is kept so the
+# population axis stays visible in the kernel launch - grid order, per-member
+# block indexing, and VMEM residency are stated rather than derived from
+# vmap batching rules, which is the form the TPU scheduling work builds on.
+# ---------------------------------------------------------------------------
+
+
+def _pad_spd_batched(B: jax.Array, block: int):
+    k, s, _ = B.shape
+    pad = (-s) % block
+    if pad:
+        Bp = jnp.pad(B, ((0, 0), (0, pad), (0, pad)))
+        diag_pad = jnp.pad(jnp.zeros((s,), B.dtype), (0, pad), constant_values=1.0)
+        Bp = Bp + jnp.diag(diag_pad)[None]
+        return Bp, s + pad
+    return B, s
+
+
+def cholesky_blocked_batched(B: jax.Array, *, block: int = 256,
+                             interpret: bool = False) -> jax.Array:
+    """Blocked lower Cholesky per member: B (K, s, s) -> C (K, s, s) tril."""
+    k, s, _ = B.shape
+    a, n = _pad_spd_batched(B, block)
+    nb = n // block
+    for kb in range(nb):
+        k0 = kb * block
+        diag = jax.lax.dynamic_slice(a, (0, k0, k0), (k, block, block))
+        Lkk = chol_block_batched(diag, interpret=interpret)
+        a = jax.lax.dynamic_update_slice(a, Lkk, (0, k0, k0))
+        rest = n - k0 - block
+        if rest:
+            panel = jax.lax.dynamic_slice(a, (0, k0 + block, k0), (k, rest, block))
+            Lp = trsm_lower_t_batched(panel, Lkk, block_m=min(128, rest),
+                                      interpret=interpret)
+            a = jax.lax.dynamic_update_slice(a, Lp, (0, k0 + block, k0))
+            trail = jax.lax.dynamic_slice(
+                a, (0, k0 + block, k0 + block), (k, rest, rest))
+            trail = trail - jnp.einsum(
+                "kij,klj->kil", Lp, Lp, preferred_element_type=jnp.float32
+            ).astype(a.dtype)
+            a = jax.lax.dynamic_update_slice(a, trail, (0, k0 + block, k0 + block))
+    return jnp.tril(a)[:, :s, :s]
+
+
+def _pad_rows_batched(x: jax.Array, mult: int):
+    m = x.shape[1]
+    pad = (-m) % mult
+    return (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x), m
+
+
+def trsm_blocked_lower_t_batched(A: jax.Array, C: jax.Array, *, block: int = 256,
+                                 interpret: bool = False) -> jax.Array:
+    """D = A (C^T)^{-1} per member: A (K, Ny, s), C (K, s, s)."""
+    k, s, _ = C.shape
+    pad = (-s) % block
+    Cp, n = _pad_spd_batched(C, block) if pad else (C, s)
+    if pad:
+        Cp = jnp.tril(Cp)
+    Ap, m = _pad_rows_batched(
+        jnp.pad(A, ((0, 0), (0, 0), (0, pad))) if pad else A, 8)
+    nb = n // block
+    rows = Ap.shape[1]
+    D = jnp.zeros_like(Ap)
+    for jb in range(nb):
+        j0 = jb * block
+        rhs = jax.lax.dynamic_slice(Ap, (0, 0, j0), (k, rows, block))
+        if jb:
+            Dleft = jax.lax.dynamic_slice(D, (0, 0, 0), (k, rows, j0))
+            Crow = jax.lax.dynamic_slice(Cp, (0, j0, 0), (k, block, j0))
+            rhs = rhs - jnp.einsum(
+                "kij,klj->kil", Dleft, Crow, preferred_element_type=jnp.float32
+            ).astype(rhs.dtype)
+        Cjj = jax.lax.dynamic_slice(Cp, (0, j0, j0), (k, block, block))
+        Dj = trsm_lower_t_batched(rhs, Cjj, block_m=min(128, rows),
+                                  interpret=interpret)
+        D = jax.lax.dynamic_update_slice(D, Dj, (0, 0, j0))
+    return D[:, :m, :s]
+
+
+def trsm_blocked_lower_batched(Dm: jax.Array, C: jax.Array, *, block: int = 256,
+                               interpret: bool = False) -> jax.Array:
+    """W = D C^{-1} per member: Dm (K, Ny, s), C (K, s, s)."""
+    k, s, _ = C.shape
+    pad = (-s) % block
+    Cp, n = _pad_spd_batched(C, block) if pad else (C, s)
+    if pad:
+        Cp = jnp.tril(Cp)
+    Dp, m = _pad_rows_batched(
+        jnp.pad(Dm, ((0, 0), (0, 0), (0, pad))) if pad else Dm, 8)
+    nb = n // block
+    rows = Dp.shape[1]
+    W = jnp.zeros_like(Dp)
+    for t in range(nb):
+        jb = nb - 1 - t
+        j0 = jb * block
+        rhs = jax.lax.dynamic_slice(Dp, (0, 0, j0), (k, rows, block))
+        if t:
+            right0 = j0 + block
+            Wright = jax.lax.dynamic_slice(W, (0, 0, right0), (k, rows, n - right0))
+            Ccol = jax.lax.dynamic_slice(Cp, (0, right0, j0), (k, n - right0, block))
+            rhs = rhs - jnp.einsum(
+                "kij,kjl->kil", Wright, Ccol, preferred_element_type=jnp.float32
+            ).astype(rhs.dtype)
+        Cjj = jax.lax.dynamic_slice(Cp, (0, j0, j0), (k, block, block))
+        Wj = trsm_lower_batched(rhs, Cjj, block_m=min(128, rows),
+                                interpret=interpret)
+        W = jax.lax.dynamic_update_slice(W, Wj, (0, 0, j0))
+    return W[:, :m, :s]
+
+
+def ridge_solve_blocked_batched(A: jax.Array, B: jax.Array, *, block: int = 256,
+                                interpret: bool = False) -> jax.Array:
+    """Population-axis tile pipeline: W~_k = A_k B_k^{-1} for every member k.
+
+    A: (K, Ny, s), B: (K, s, s) -> (K, Ny, s).
+    """
+    C = cholesky_blocked_batched(B, block=block, interpret=interpret)
+    D = trsm_blocked_lower_t_batched(A, C, block=block, interpret=interpret)
+    return trsm_blocked_lower_batched(D, C, block=block, interpret=interpret)

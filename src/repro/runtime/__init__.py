@@ -1,3 +1,9 @@
-from repro.runtime.trainer import Trainer, TrainerConfig, ElasticRestart  # noqa: F401
+from repro.runtime.trainer import (  # noqa: F401
+    ElasticRestart,
+    PopulationTrainer,
+    PopulationTrainerConfig,
+    Trainer,
+    TrainerConfig,
+)
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
 from repro.runtime.server import Server, Request  # noqa: F401

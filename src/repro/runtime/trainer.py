@@ -1,6 +1,6 @@
-"""Fault-tolerant training loop.
+"""Fault-tolerant training loop + population-search runtime wrapper.
 
-Responsibilities beyond calling train_step:
+``Trainer`` responsibilities beyond calling train_step:
   * checkpoint/restart: periodic saves (keep-last-k), auto-resume from the
     newest valid checkpoint on (re)start,
   * failure handling: a step that raises (device loss, preemption signal,
@@ -113,3 +113,72 @@ class Trainer:
             if step % self.cfg.ckpt_every == 0 or step == num_steps:
                 self.ckpt.save((params, opt_state), step)
         return params, opt_state, step
+
+
+# ---------------------------------------------------------------------------
+# Population hyperparameter search runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PopulationTrainerConfig:
+    """Knobs for the vmapped population search (core/population.py)."""
+
+    divs: int = 4                   # grid seeds per axis -> K = divs^2 members
+    rounds: int = 1                 # cull -> refine -> re-evaluate rounds
+    steps_per_round: int = 1        # truncated-BP epochs per round
+    minibatch: int = 4
+    survive_frac: float = 0.5
+    jitter: float = 0.15
+    ckpt_dir: Optional[str] = None  # save the winning member when set
+
+
+class PopulationTrainer:
+    """Runtime wrapper over ``repro.core.population.train_population``.
+
+    Runs the whole population as one jitted program per round, mirrors the
+    ``Trainer`` conventions (a ``metrics_log`` of per-round dicts, optional
+    checkpointing of the winning member via ``CheckpointManager``), and
+    dispatches on the batch type: ``TimeSeriesBatch`` pairs run the
+    classification path, ``RegressionBatch`` pairs the NRMSE/regression path.
+    """
+
+    def __init__(self, cfg: PopulationTrainerConfig):
+        self.cfg = cfg
+        self.metrics_log: list = []
+
+    def fit(self, dfr_cfg, train, evalb, seed: int = 0, **overrides):
+        from repro.core import population
+        from repro.core.types import RegressionBatch
+
+        runner = (
+            population.train_population_regression
+            if isinstance(train, RegressionBatch)
+            else population.train_population_classification
+        )
+        kwargs = dict(
+            divs=self.cfg.divs,
+            rounds=self.cfg.rounds,
+            steps_per_round=self.cfg.steps_per_round,
+            minibatch=self.cfg.minibatch,
+            survive_frac=self.cfg.survive_frac,
+            jitter=self.cfg.jitter,
+            seed=seed,
+        )
+        kwargs.update(overrides)
+        result = runner(dfr_cfg, train, evalb, **kwargs)
+        self.metrics_log = list(result.history)
+        if self.cfg.ckpt_dir is not None:
+            ckpt = CheckpointManager(self.cfg.ckpt_dir, keep=1)
+            ckpt.save(
+                result.best_params,
+                step=kwargs["rounds"],
+                metadata={
+                    "best_nrmse": result.best_nrmse,
+                    "best_acc": result.best_acc,
+                    "best_beta": result.best_beta,
+                    "best_p": result.best_p,
+                    "best_q": result.best_q,
+                },
+            )
+        return result

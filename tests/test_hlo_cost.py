@@ -33,9 +33,13 @@ def test_scan_multiplies_flops():
     want = 7 * 2 * 16 * 32 * 32
     assert cost.flops == pytest.approx(want, rel=0.05)
     assert cost.n_while_unknown == 0
-    # and the built-in analysis is indeed wrong (sanity of our premise)
-    xla = comp.cost_analysis().get("flops", 0.0)
-    assert xla < 0.5 * want
+    # and the built-in analysis is indeed wrong (sanity of our premise);
+    # cost_analysis() returns a dict in newer JAX, a one-per-program list
+    # of dicts in older versions
+    xla = comp.cost_analysis()
+    if isinstance(xla, (list, tuple)):
+        xla = xla[0] if xla else {}
+    assert xla.get("flops", 0.0) < 0.5 * want
 
 
 def test_nested_scan_multiplies():

@@ -5,8 +5,16 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.cholesky import chol_block, trsm_lower, trsm_lower_t
+from repro.kernels.cholesky import (
+    chol_block,
+    chol_block_batched,
+    trsm_lower,
+    trsm_lower_batched,
+    trsm_lower_t,
+    trsm_lower_t_batched,
+)
 from repro.kernels.dprr import dprr_pallas
+from repro.kernels.ridge_solve import ridge_solve_blocked_batched
 
 
 @pytest.mark.parametrize("t,nx,block_t", [(128, 30, 64), (300, 30, 128),
@@ -45,6 +53,63 @@ def test_trsm_kernels_sweep(m, n):
     got2 = trsm_lower(a, L, block_m=min(128, m), interpret=True)
     np.testing.assert_allclose(np.asarray(got2), np.asarray(ref.trsm_lower_ref(a, L)),
                                rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("k,n", [(2, 16), (4, 64)])
+def test_chol_block_batched_matches_loop(k, n):
+    rng = np.random.default_rng(k * n)
+    tiles = []
+    for _ in range(k):
+        M = rng.normal(size=(n, 2 * n)).astype(np.float32)
+        tiles.append(M @ M.T + n * np.eye(n, dtype=np.float32))
+    a = jnp.asarray(np.stack(tiles))
+    got = chol_block_batched(a, interpret=True)
+    for i in range(k):
+        want = chol_block(a[i], interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("k,m,n", [(2, 8, 32), (3, 128, 64)])
+def test_trsm_batched_kernels_match_loop(k, m, n):
+    rng = np.random.default_rng(k + m + n)
+    Ls, As = [], []
+    for _ in range(k):
+        M = rng.normal(size=(n, 2 * n)).astype(np.float32)
+        Ls.append(np.linalg.cholesky(M @ M.T + n * np.eye(n)).astype(np.float32))
+        As.append(rng.normal(size=(m, n)).astype(np.float32))
+    L = jnp.asarray(np.stack(Ls))
+    a = jnp.asarray(np.stack(As))
+    bm = min(128, m)
+    got_t = trsm_lower_t_batched(a, L, block_m=bm, interpret=True)
+    got = trsm_lower_batched(a, L, block_m=bm, interpret=True)
+    for i in range(k):
+        np.testing.assert_allclose(
+            np.asarray(got_t[i]),
+            np.asarray(trsm_lower_t(a[i], L[i], block_m=bm, interpret=True)),
+            rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(
+            np.asarray(got[i]),
+            np.asarray(trsm_lower(a[i], L[i], block_m=bm, interpret=True)),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_ridge_solve_blocked_batched_vs_dense_ref():
+    rng = np.random.default_rng(7)
+    k, s, ny, block = 3, 100, 5, 64
+    As, Bs = [], []
+    for _ in range(k):
+        R = rng.normal(size=(s, 2 * s)).astype(np.float32)
+        Bs.append(R @ R.T + 0.1 * np.eye(s, dtype=np.float32))
+        As.append(rng.normal(size=(ny, s)).astype(np.float32))
+    A = jnp.asarray(np.stack(As))
+    B = jnp.asarray(np.stack(Bs))
+    got = ridge_solve_blocked_batched(A, B, block=block, interpret=True)
+    for i in range(k):
+        want = np.asarray(As[i]) @ np.linalg.inv(np.asarray(Bs[i], np.float64))
+        scale = np.max(np.abs(want))
+        np.testing.assert_allclose(np.asarray(got[i]) / scale, want / scale,
+                                   rtol=0, atol=3e-4)
 
 
 @pytest.mark.parametrize("s,block", [(100, 64), (300, 128), (257, 128)])

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests only")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dprr, reservoir, ridge
 from repro.optim.compression import compress_int8, decompress_int8

@@ -88,6 +88,76 @@ def test_op_ratio_naive_over_proposed_approx_12():
     assert 10.0 < ratio < 13.0
 
 
+def _spd(rng, s, dtype, jitter=0.1):
+    R = rng.normal(size=(s, 2 * s)).astype(dtype)
+    return (R @ R.T + jitter * s * np.eye(s, dtype=dtype)).astype(dtype)
+
+
+@pytest.mark.parametrize("s,ny", [(13, 2), (57, 5), (111, 9)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_parity_across_sizes_and_dtypes(s, ny, dtype):
+    """ridge_gaussian_numpy == ridge_cholesky_packed_numpy ==
+    ridge_cholesky_packed_jax == ridge_cholesky_blocked, every size/dtype."""
+    if dtype == np.float64 and not jax.config.read("jax_enable_x64"):
+        # JAX arrays downcast to f32 without x64 mode; compare in f32 there
+        jdtype = np.float32
+    else:
+        jdtype = dtype
+    rng = np.random.default_rng(s * ny)
+    B = _spd(rng, s, dtype)
+    A = rng.normal(size=(ny, s)).astype(dtype)
+    ref = (A.astype(np.float64)
+           @ np.linalg.inv(B.astype(np.float64))).astype(np.float64)
+    scale = np.max(np.abs(ref)) + 1e-12
+    tol = 2e-3 if jdtype == np.float32 else 1e-9
+    outs = {
+        "gauss_np": ridge.ridge_gaussian_numpy(A, B),
+        "chol_packed_np": ridge.ridge_cholesky_packed_numpy(A, B),
+        "chol_packed_jax": np.asarray(
+            ridge.ridge_cholesky_packed(jnp.asarray(A, jdtype), jnp.asarray(B, jdtype))
+        ),
+        "chol_blocked": np.asarray(
+            ridge.ridge_cholesky_blocked(jnp.asarray(A, jdtype), jnp.asarray(B, jdtype))
+        ),
+    }
+    for name, W in outs.items():
+        np.testing.assert_allclose(W / scale, ref / scale, rtol=0, atol=tol,
+                                   err_msg=f"{name} s={s} ny={ny} {dtype}")
+
+
+@pytest.mark.parametrize("k,s,ny", [(1, 21, 3), (4, 57, 5), (7, 30, 2)])
+def test_batched_solve_matches_per_member_loop(k, s, ny):
+    """The population-axis solve == a loop of single-member solves."""
+    rng = np.random.default_rng(k + s)
+    A = jnp.asarray(np.stack([rng.normal(size=(ny, s)).astype(np.float32)
+                              for _ in range(k)]))
+    B = jnp.asarray(np.stack([_spd(rng, s, np.float32) for _ in range(k)]))
+    got = np.asarray(ridge.ridge_cholesky_batched(A, B))
+    assert got.shape == (k, ny, s)
+    for i in range(k):
+        want = np.asarray(ridge.ridge_cholesky_blocked(A[i], B[i]))
+        np.testing.assert_allclose(got[i], want, rtol=2e-3, atol=2e-3)
+    got_gauss = np.asarray(ridge.ridge_solve_batched(A, B, method="gaussian"))
+    for i in range(k):
+        want = np.asarray(ridge.ridge_gaussian(A[i], B[i]))
+        np.testing.assert_allclose(got_gauss[i], want, rtol=2e-3, atol=2e-3)
+
+
+def test_batched_solve_rejects_unknown_method(spd_system):
+    A, B = spd_system
+    with pytest.raises(ValueError):
+        ridge.ridge_solve_batched(A[None], B[None], method="nope")
+
+
+def test_regularize_broadcasts_over_population_axis(spd_system):
+    _, B = spd_system
+    stack = jnp.stack([B, 2.0 * B])
+    out = ridge.regularize(stack, jnp.float32(0.5))
+    np.testing.assert_allclose(
+        np.asarray(out[1]), np.asarray(2.0 * B + 0.5 * jnp.eye(B.shape[0])),
+        rtol=1e-6)
+
+
 def test_accumulate_ab_streaming(spd_system, rng):
     s = 13
     n = 40
