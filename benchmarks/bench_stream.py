@@ -1,0 +1,175 @@
+"""Stream-serving throughput: batched continuous-batching slots vs
+per-stream stepping.
+
+Acceptance target (ISSUE 2): the stream server's fixed-shape batched-slot
+jitted step must deliver >= 3x the served-samples/sec of stepping the same
+streams one-by-one through ``OnlineDFR`` (infer-before-update + train +
+the same periodic ridge-refresh protocol per stream).  Both paths are
+jit-warmed before timing, so the comparison is steady-state dispatch +
+compute, not compilation.
+
+Also reports p50/p99 per-window step latency for both paths: the batched
+step serves ``S`` windows per dispatch, the serial path one - the latency
+columns show what continuous batching costs the individual stream.
+
+    PYTHONPATH=src python benchmarks/bench_stream.py [--smoke|--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OnlineDFR
+from repro.core.types import DFRConfig
+from repro.runtime import StreamRequest, StreamServer
+
+
+def _make_streams(n_streams: int, n_samples: int, t_len: int, n_in: int,
+                  n_classes: int, seed: int = 0) -> List[StreamRequest]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n_streams):
+        out.append(StreamRequest(
+            rid=rid,
+            u=rng.normal(size=(n_samples, t_len, n_in)).astype(np.float32),
+            length=rng.integers(max(2, t_len // 2), t_len + 1,
+                                n_samples).astype(np.int32),
+            label=rng.integers(0, n_classes, n_samples).astype(np.int32),
+        ))
+    return out
+
+
+def _serve_batched(cfg, streams, t_len, window, phase_steps, refresh_every):
+    srv = StreamServer(
+        cfg, t_max=t_len, max_streams=len(streams), window=window,
+        phase_steps=phase_steps, refresh_every=refresh_every,
+    )
+    for s in streams:
+        srv.submit(s)
+    t0 = time.perf_counter()
+    srv.run_until_drained()
+    elapsed = time.perf_counter() - t0
+    return elapsed, srv.latency_percentiles_ms()
+
+
+def _serve_serial(system, streams, window, phase_steps, refresh_every):
+    """The same protocol, one stream at a time through OnlineDFR."""
+    lr_on, lr_off = jnp.float32(0.2), jnp.float32(0.0)
+    beta = jnp.float32(1e-2)
+    step_times = []
+    t0 = time.perf_counter()
+    for req in streams:
+        state = system.init()
+        served = 0
+        steps = 0
+        while served < req.n_samples:
+            n = min(window, req.n_samples - served)
+            u = jnp.asarray(req.u[served:served + n])
+            ln = jnp.asarray(req.length[served:served + n])
+            lab = jnp.asarray(req.label[served:served + n])
+            ts = time.perf_counter()
+            preds = system.infer(state, u, ln)          # infer-before-update
+            lr = lr_on if steps < phase_steps else lr_off
+            state, _ = system.step(state, u, ln, lab, lr, lr)
+            if steps + 1 == phase_steps:
+                state = system.reset_statistics(state)
+            steps += 1
+            if steps % refresh_every == 0 and steps > phase_steps:
+                state = system.refresh_output(state, beta)
+            jax.block_until_ready(preds)
+            step_times.append(time.perf_counter() - ts)
+            served += n
+    elapsed = time.perf_counter() - t0
+    t = np.asarray(step_times) * 1e3
+    return elapsed, {"p50_ms": float(np.percentile(t, 50)),
+                     "p99_ms": float(np.percentile(t, 99))}
+
+
+def _bench_case(n_streams: int, n_samples: int, t_len: int, n_nodes: int,
+                window: int = 4, reps: int = 2) -> Dict:
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=n_nodes)
+    phase_steps, refresh_every = 4, 5
+    total_samples = n_streams * n_samples
+
+    # NOTE: serial stepping pads the tail window to < `window` samples only
+    # on the final step per stream; the batched server zero-weights the tail
+    # inside the same fixed shape.  Use n_samples % window == 0 so both
+    # paths serve identical work.
+    assert n_samples % window == 0
+
+    # one OnlineDFR reused across reps so the serial path's jitted
+    # step/infer/refresh compile once (self is a static argument)
+    system = OnlineDFR(cfg)
+
+    def run_batched():
+        streams = _make_streams(n_streams, n_samples, t_len, 3, 4)
+        return _serve_batched(cfg, streams, t_len, window, phase_steps,
+                              refresh_every)
+
+    def run_serial():
+        streams = _make_streams(n_streams, n_samples, t_len, 3, 4)
+        return _serve_serial(system, streams, window, phase_steps,
+                             refresh_every)
+
+    run_batched()   # warm both jitted programs (compile excluded)
+    run_serial()
+    best_b, best_s = None, None
+    for _ in range(reps):
+        tb, lat_b = run_batched()
+        if best_b is None or tb < best_b[0]:
+            best_b = (tb, lat_b)
+        ts, lat_s = run_serial()
+        if best_s is None or ts < best_s[0]:
+            best_s = (ts, lat_s)
+    tb, lat_b = best_b
+    ts, lat_s = best_s
+
+    return {
+        "table": "stream-serving",
+        "cell": f"S{n_streams}/N{n_samples}/Nx{n_nodes}",
+        "bp_time_s": round(tb, 5),
+        "serial_time_s": round(ts, 5),
+        "batched_samples_per_s": round(total_samples / tb, 1),
+        "serial_samples_per_s": round(total_samples / ts, 1),
+        "batched_p50_ms": round(lat_b["p50_ms"], 3),
+        "batched_p99_ms": round(lat_b["p99_ms"], 3),
+        "serial_p50_ms": round(lat_s["p50_ms"], 3),
+        "serial_p99_ms": round(lat_s["p99_ms"], 3),
+        "speedup": round(ts / tb, 2),
+    }
+
+
+def run(full: bool = False, smoke: bool = False) -> List[Dict]:
+    # The batched step amortizes dispatch + the per-window small-op work
+    # across all S slots; the headline Nx=8/S=16 regime is where the >= 3x
+    # acceptance target lands (~4x on 2-core CPU).  At paper nodes (Nx=16+)
+    # the periodic batched (s, s) Cholesky refresh grows as s^3 and eats
+    # into the step speedup (~2.5-3x) - reported honestly, as with
+    # bench_population's dispatch-amortization regime.
+    if smoke:
+        cases = [(4, 8, 16, 8)]
+    elif full:
+        cases = [(16, 24, 24, 8), (16, 24, 24, 16), (16, 64, 32, 16),
+                 (12, 24, 24, 30)]
+    else:
+        cases = [(16, 24, 24, 8), (16, 24, 24, 16)]
+    return [_bench_case(*c) for c in cases]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny case (CI lane)")
+    args = ap.parse_args()
+    for row in run(full=args.full, smoke=args.smoke):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

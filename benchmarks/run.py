@@ -27,11 +27,12 @@ def main() -> None:
                     help="all 12 datasets at full Table-4 sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma list: ridge,backprop,truncation,system,"
-                         "population,roofline")
+                         "population,stream,roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_backprop, bench_population, bench_ridge,
-                            bench_system, bench_truncation, roofline)
+                            bench_stream, bench_system, bench_truncation,
+                            roofline)
 
     suites = {
         "ridge": lambda: bench_ridge.run(args.full),
@@ -39,6 +40,7 @@ def main() -> None:
         "truncation": lambda: bench_truncation.run(args.full),
         "system": lambda: bench_system.run(args.full),
         "population": lambda: bench_population.run(args.full),
+        "stream": lambda: bench_stream.run(args.full),
         "roofline": lambda: roofline.summary_csv(),
     }
     selected = (args.only.split(",") if args.only else list(suites))

@@ -36,7 +36,19 @@ from repro.core.backprop import (  # noqa: F401
     loss_from_logits,
 )
 from repro.core.dfr import DFRModel  # noqa: F401
-from repro.core.online import OnlineDFR, OnlineState  # noqa: F401
+from repro.core.online import (  # noqa: F401
+    OnlineDFR,
+    OnlineEnsemble,
+    OnlineState,
+    init_state,
+    online_infer,
+    online_logits,
+    online_serve_step,
+    online_step,
+    refresh_output,
+    refresh_output_batched,
+    reset_statistics,
+)
 from repro.core.readout import DistributedDFRReadout, ReadoutConfig  # noqa: F401
 from repro.core.population import (  # noqa: F401
     PopulationEval,

@@ -161,16 +161,22 @@ def grads_truncated_manual(
 # ---------------------------------------------------------------------------
 
 
-def _truncated_loss(
+def truncated_loss_from_aux(
     params: DFRParams,
-    j_seq: Array,
+    aux: ForwardAux,
     onehot: Array,
     f: Callable[[Array], Array],
-    lengths: Optional[Array] = None,
     loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
 ) -> Array:
+    """Truncated objective from a precomputed forward pass.
+
+    Every use of ``aux`` below is stop_gradient'ed, so gradients flow only
+    through the re-derived k = T step and the readout - which is why the
+    forward pass can be computed once and shared (e.g. with the serving
+    path's infer-before-update, ``repro.core.online.online_serve_step``)
+    without changing the gradients at all.
+    """
     sg = jax.lax.stop_gradient
-    aux = forward(params, j_seq, f, lengths)
     n_nodes = aux.x_last.shape[-1]
 
     x_prev = sg(aux.x_prev)
@@ -193,6 +199,34 @@ def _truncated_loss(
 
     logits = r @ params.W.T + params.b
     return jnp.sum(loss_fn(logits, onehot))
+
+
+def _truncated_loss(
+    params: DFRParams,
+    j_seq: Array,
+    onehot: Array,
+    f: Callable[[Array], Array],
+    lengths: Optional[Array] = None,
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
+) -> Array:
+    aux = forward(params, j_seq, f, lengths)
+    return truncated_loss_from_aux(params, aux, onehot, f, loss_fn)
+
+
+def grads_truncated_from_aux(
+    params: DFRParams,
+    aux: ForwardAux,
+    onehot: Array,
+    f: Callable[[Array], Array],
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
+) -> Tuple[Array, DFRParams]:
+    """Truncated-BP gradients reusing a precomputed forward pass (identical
+    to ``grads_truncated`` - the truncation stop_gradients everything the
+    forward produced, so sharing it is free)."""
+    loss, g = jax.value_and_grad(truncated_loss_from_aux)(
+        params, aux, onehot, f, loss_fn
+    )
+    return loss, g
 
 
 def grads_truncated(

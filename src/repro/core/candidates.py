@@ -1,0 +1,171 @@
+"""Candidate (p, q) machinery shared by the offline population engine and
+the online ensemble.
+
+The paper's search box (Sec. 4.1) and its companion optimization paper
+(arXiv:2504.12363) treat the reservoir hyperparameters (p, q) as a
+*candidate set* problem: seed many starts, evaluate, cull the losers and
+re-seed them near the survivors.  PR 1 built that machinery inside
+``repro.core.population`` for offline hyperparameter search; this module
+extracts the pieces that the *online* ensemble (``repro.core.online``)
+reuses so members of a live serving ensemble can be periodically culled and
+re-seeded exactly like offline candidates:
+
+  * ``grid_points`` / ``grid_candidates``  - log-space grid seeding
+  * ``seed_candidates``                    - jittered seeds around an anchor
+                                             (member 0 stays exact, so a
+                                             K=1 ensemble equals the single
+                                             system bit-for-bit)
+  * ``survivor_parents``                   - rank-order parent assignment
+  * ``jitter_clones``                      - multiplicative log-normal
+                                             jitter on culled slots
+  * ``cull_population``                    - the offline composition of the
+                                             two (moved here verbatim from
+                                             ``population``; re-exported
+                                             there for compatibility)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Array, DFRConfig, DFRParams
+
+P_LOG_RANGE = (-3.75, -0.25)  # paper Sec. 4.1 search box, log10
+Q_LOG_RANGE = (-2.75, -0.25)
+
+
+# ---------------------------------------------------------------------------
+# Grid seeding
+# ---------------------------------------------------------------------------
+
+
+def grid_points(divs: int, lo: float, hi: float) -> np.ndarray:
+    """``divs`` equidistant points in log10 space, inclusive of endpoints."""
+    if divs == 1:
+        return np.array([10.0 ** ((lo + hi) / 2.0)])
+    return 10.0 ** np.linspace(lo, hi, divs)
+
+
+def grid_candidates(
+    divs: int,
+    p_range: Tuple[float, float] = P_LOG_RANGE,
+    q_range: Tuple[float, float] = Q_LOG_RANGE,
+    dtype=jnp.float32,
+) -> Tuple[Array, Array]:
+    """K = divs^2 grid-seeded (p, q) pairs, in ``itertools.product`` order
+    (p-major), matching the serial grid search's iteration order so rankings
+    and tie-breaks line up exactly."""
+    ps = grid_points(divs, *p_range)
+    qs = grid_points(divs, *q_range)
+    pp, qq = np.meshgrid(ps, qs, indexing="ij")
+    return jnp.asarray(pp.reshape(-1), dtype), jnp.asarray(qq.reshape(-1), dtype)
+
+
+def init_population(cfg: DFRConfig, ps: Array, qs: Array) -> DFRParams:
+    """Stacked population pytree from (K,) candidate vectors."""
+    k = ps.shape[0]
+    return DFRParams(
+        p=ps.astype(cfg.dtype),
+        q=qs.astype(cfg.dtype),
+        W=jnp.zeros((k, cfg.n_classes, cfg.n_rep), cfg.dtype),
+        b=jnp.zeros((k, cfg.n_classes), cfg.dtype),
+    )
+
+
+def seed_candidates(
+    key: Array,
+    k: int,
+    p_init: float,
+    q_init: float,
+    jitter: float = 0.1,
+    p_range: Tuple[float, float] = P_LOG_RANGE,
+    q_range: Tuple[float, float] = Q_LOG_RANGE,
+    dtype=jnp.float32,
+) -> Tuple[Array, Array]:
+    """K jittered (p, q) seeds around an anchor point.
+
+    Member 0 is the *exact* anchor (no jitter), so a K=1 ensemble reproduces
+    the single-system initialization identically; members 1..K-1 get
+    multiplicative log-normal jitter, clipped back into the search box.
+    """
+    eps = jax.random.normal(key, (2, k), dtype)
+    scale = jnp.where(jnp.arange(k) == 0, 0.0, jitter)
+    p = jnp.asarray(p_init, dtype) * jnp.exp(scale * eps[0])
+    q = jnp.asarray(q_init, dtype) * jnp.exp(scale * eps[1])
+    p = jnp.clip(p, 10.0 ** p_range[0], 10.0 ** p_range[1])
+    q = jnp.clip(q, 10.0 ** q_range[0], 10.0 ** q_range[1])
+    return p, q
+
+
+# ---------------------------------------------------------------------------
+# Rank-ordered selection / culling
+# ---------------------------------------------------------------------------
+
+
+def survivor_parents(
+    fitness: Array, survive_frac: float = 0.5
+) -> Tuple[Array, Array, int]:
+    """Parent assignment for a cull round.
+
+    ``fitness`` is (K,), lower-is-better.  Returns ``(parent, keep, n_keep)``
+    where ``parent`` (K,) indexes the member each slot inherits from (the
+    top ``ceil(K * survive_frac)`` slots take the survivors in rank order;
+    each culled slot cycles through the survivors), and ``keep`` (K,) is the
+    boolean survivor mask *after* the reorder (first ``n_keep`` slots).
+    """
+    k = fitness.shape[0]
+    n_keep = max(1, min(k, int(np.ceil(k * survive_frac))))
+    order = jnp.argsort(fitness)  # ascending: best first
+    parent = jnp.concatenate(
+        [order[:n_keep], order[jnp.arange(k - n_keep) % n_keep]]
+    )
+    keep = jnp.arange(k) < n_keep
+    return parent, keep, n_keep
+
+
+def jitter_clones(
+    key: Array,
+    p: Array,
+    q: Array,
+    keep: Array,
+    jitter: float = 0.15,
+    p_range: Tuple[float, float] = P_LOG_RANGE,
+    q_range: Tuple[float, float] = Q_LOG_RANGE,
+) -> Tuple[Array, Array]:
+    """Log-normal jitter on the non-surviving slots of (p, q), clipped back
+    into the search box; surviving slots (``keep`` True) pass unchanged."""
+    k = p.shape[0]
+    eps = jax.random.normal(key, (2, k), p.dtype)
+    scale = jnp.where(keep, 0.0, jitter)
+    new_p = p * jnp.exp(scale * eps[0])
+    new_q = q * jnp.exp(scale * eps[1])
+    new_p = jnp.clip(new_p, 10.0 ** p_range[0], 10.0 ** p_range[1])
+    new_q = jnp.clip(new_q, 10.0 ** q_range[0], 10.0 ** q_range[1])
+    return new_p, new_q
+
+
+def cull_population(
+    pop: DFRParams,
+    fitness: Array,
+    key: Array,
+    survive_frac: float = 0.5,
+    jitter: float = 0.15,
+    p_range: Tuple[float, float] = P_LOG_RANGE,
+    q_range: Tuple[float, float] = Q_LOG_RANGE,
+) -> DFRParams:
+    """Replace the worst members with jittered clones of the best.
+
+    ``fitness`` is (K,), lower-is-better (NRMSE, or -accuracy).  The top
+    ``ceil(K * survive_frac)`` members survive verbatim (rank order); each
+    culled slot is re-seeded from a survivor (cycled) with multiplicative
+    log-normal jitter on (p, q), clipped back into the search box.  K stays
+    constant so every downstream program keeps its static shapes.
+    """
+    parent, keep, _ = survivor_parents(fitness, survive_frac)
+    new_p, new_q = jitter_clones(
+        key, pop.p[parent], pop.q[parent], keep, jitter, p_range, q_range
+    )
+    return DFRParams(p=new_p, q=new_q, W=pop.W[parent], b=pop.b[parent])

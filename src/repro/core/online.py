@@ -1,4 +1,4 @@
-"""Online edge training + inference loop (paper Sec. 3.1): one fused step.
+"""Online edge training + inference (paper Sec. 3.1): one fused step.
 
 The paper's system processes a stream sample-by-sample, entirely on-device:
 
@@ -10,28 +10,50 @@ The paper's system processes a stream sample-by-sample, entirely on-device:
                                       the output layer.
 
 Everything below is a single jitted program per step - the TPU analogue of
-"everything on the FPGA, no host round trips".  ``OnlineDFR.step`` is also
-the unit that scales out: (A, B) and the parameter grads are associative
-sums, so the distributed variant (repro.core.readout) psums them across the
-data axes.
+"everything on the FPGA, no host round trips".
+
+The module is organized as a *functional* core plus thin stateful wrappers:
+
+  * ``online_step`` / ``online_infer`` / ``online_logits`` /
+    ``refresh_output`` / ``reset_statistics`` - pure functions over
+    ``OnlineState`` pytrees.  All of them vmap cleanly over a leading
+    population axis (``OnlineEnsemble``) or a leading slot axis (the
+    continuous-batching stream server in ``repro.runtime.stream_server``).
+  * ``OnlineDFR``   - the single-stream system (thin jitted wrapper).
+  * ``OnlineEnsemble`` - K independent members (jittered (p, q) seeds,
+    shared mask) vmapped over the member axis, with online culling /
+    re-seeding via the shared candidate machinery in
+    ``repro.core.candidates`` - the offline population engine's protocol
+    applied to a live serving ensemble.
+
+Scale-out: (A, B) and the parameter grads are associative sums, so
+``online_step(axis_names=...)`` psums them across the data axes
+(``repro.distributed.sharding.data_axes()``) for data-parallel streams, and
+the ensemble's member axis shards across devices via the ``member`` logical
+axis in the sharding rule table (members are embarrassingly parallel).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import backprop, dprr, masking, reservoir, ridge
+from repro.core import backprop, candidates, dprr, masking, reservoir, ridge
 from repro.core.types import Array, DFRConfig, DFRParams, RidgeState
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class OnlineState:
-    """Carry of the online system (a pytree)."""
+    """Carry of the online system (a pytree).
+
+    Leaves may carry a leading member/slot axis: every pure function below
+    is written for the single-system shapes and vmapped by the ensemble and
+    stream-server wrappers.
+    """
 
     params: DFRParams
     ridge: RidgeState
@@ -47,6 +69,264 @@ class OnlineState:
         return cls(*children)
 
 
+# ---------------------------------------------------------------------------
+# Pure functional API (vmappable / shard_map-able)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: DFRConfig) -> OnlineState:
+    """Fresh single-system state: paper init (p, q), zero readout + stats."""
+    return OnlineState(
+        params=DFRParams.init(cfg),
+        ridge=RidgeState.zeros(cfg.s, cfg.n_classes, cfg.dtype),
+        step=jnp.zeros((), jnp.int32),
+        loss_ema=jnp.zeros((), cfg.dtype),
+    )
+
+
+def reset_statistics(state: OnlineState) -> OnlineState:
+    """Zero the Ridge sufficient statistics, keeping (p, q, W, b) and the
+    step counter.
+
+    This is the phase-switch primitive of the paper's protocol: once the
+    reservoir parameters stop moving (truncated-bp phase ends), the (A, B)
+    accumulated under the *old* features are stale and must be restarted.
+    Pure and shape-preserving, so it vmaps over member/slot axes and can be
+    applied selectively with ``jax.tree_util.tree_map`` + ``jnp.where``.
+    """
+    return OnlineState(
+        params=state.params,
+        ridge=jax.tree_util.tree_map(jnp.zeros_like, state.ridge),
+        step=state.step,
+        loss_ema=state.loss_ema,
+    )
+
+
+def online_logits(
+    cfg: DFRConfig,
+    mask: Array,
+    state: OnlineState,
+    u: Array,        # (B, T, n_in)
+    length: Array,   # (B,)
+) -> Array:
+    """Readout logits on a window: (B, Ny)."""
+    f = cfg.f()
+    j_seq = masking.apply_mask(mask, u)
+    x = reservoir.run_reservoir(
+        state.params.p, state.params.q, j_seq, f=f, lengths=length
+    )
+    r = dprr.compute_dprr(x, lengths=length)
+    return r @ state.params.W.T + state.params.b
+
+
+def online_infer(
+    cfg: DFRConfig,
+    mask: Array,
+    state: OnlineState,
+    u: Array,
+    length: Array,
+) -> Array:
+    """Inference on a window: class predictions (B,)."""
+    return jnp.argmax(online_logits(cfg, mask, state, u, length), axis=-1)
+
+
+def online_step(
+    cfg: DFRConfig,
+    mask: Array,
+    state: OnlineState,
+    u: Array,        # (B, T, n_in) window of streamed samples
+    length: Array,   # (B,)
+    label: Array,    # (B,) int32
+    lr_res: Array,
+    lr_out: Array,
+    axis_names: Sequence[str] = (),
+    weight: Optional[Array] = None,
+) -> Tuple[OnlineState, Dict[str, Array]]:
+    """One online training step: SGD update + (A, B) accumulation.
+
+    With ``axis_names`` (inside ``shard_map`` over the data axes), the loss,
+    grads, (A, B) increments and sample count are psum-reduced so every
+    shard applies the identical global update - the sums are associative
+    (paper Eq. 38), so this is exact, not an approximation.
+
+    ``weight`` is an optional (B,) 0/1 live-sample mask for fixed-shape
+    batching (the stream server's tail windows): dead samples contribute
+    nothing to the loss, the grads, the (A, B) statistics or the count.
+    ``weight=None`` is the exact unweighted path.
+    """
+    f = cfg.f()
+    axis_names = tuple(axis_names)
+
+    def _psum(x):
+        return jax.lax.psum(x, axis_names) if axis_names else x
+
+    j_seq = masking.apply_mask(mask, u)
+    onehot = jax.nn.one_hot(label, cfg.n_classes, dtype=cfg.dtype)
+    if weight is None:
+        loss_fn = backprop.loss_from_logits
+        n_live = jnp.asarray(u.shape[0], cfg.dtype)
+    else:
+        weight = weight.astype(cfg.dtype)
+        loss_fn = lambda lg, oh: weight * backprop.loss_from_logits(lg, oh)  # noqa: E731
+        n_live = jnp.sum(weight)
+    loss, g = backprop.grads_truncated(
+        state.params, j_seq, onehot, f, lengths=length, loss_fn=loss_fn
+    )
+    loss = _psum(loss)
+    g = jax.tree_util.tree_map(_psum, g)
+    bsz = jnp.maximum(_psum(n_live), 1.0)
+    inv = 1.0 / bsz
+    params = backprop.apply_sgd(state.params, g, lr_res, lr_out, inv_batch=inv)
+    # streaming sufficient statistics with the *updated* reservoir params
+    x = reservoir.run_reservoir(params.p, params.q, j_seq, f=f, lengths=length)
+    r = dprr.compute_dprr(x, lengths=length)
+    rt = dprr.r_tilde(r)
+    # 0/1 weights scale rt once: both the A contraction (onehot . rt) and the
+    # B outer product (rt . rt, where w^2 = w) drop dead samples exactly
+    rt_acc = rt if weight is None else rt * weight[:, None]
+    dA, dB = ridge.accumulate_ab(
+        jnp.zeros_like(state.ridge.A), jnp.zeros_like(state.ridge.B), rt_acc, onehot
+    )
+    new = OnlineState(
+        params=params,
+        ridge=RidgeState(
+            A=state.ridge.A + _psum(dA),
+            B=state.ridge.B + _psum(dB),
+            count=state.ridge.count + _psum(n_live).astype(state.ridge.count.dtype),
+        ),
+        step=state.step + 1,
+        loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
+    )
+    logits = r @ params.W.T + params.b
+    hits = (jnp.argmax(logits, -1) == label).astype(jnp.float32)
+    if weight is not None:
+        hits = hits * weight
+    metrics = {
+        "loss": loss * inv,
+        "acc": _psum(jnp.sum(hits)) / bsz.astype(jnp.float32),
+    }
+    return new, metrics
+
+
+def online_serve_step(
+    cfg: DFRConfig,
+    mask: Array,
+    state: OnlineState,
+    u: Array,        # (B, T, n_in) window of streamed samples
+    length: Array,   # (B,)
+    label: Array,    # (B,) int32
+    lr: Array,       # scalar slot learning rate (0 in the frozen phase)
+    weight: Array,   # (B,) 0/1 live-sample mask
+    accumulate: Array,  # scalar 0/1: accumulate (A, B) this step?
+) -> Tuple[OnlineState, Array, Dict[str, Array]]:
+    """Fused infer-before-update + train step for the serving path.
+
+    One forward pass serves three consumers (the advantage a fused serving
+    step has over separate ``infer``/``step`` calls):
+
+      * the returned ``logits`` are the infer-before-update predictions
+        (old parameters - the honest online metric),
+      * the truncated-BP gradients reuse the same pass
+        (``backprop.grads_truncated_from_aux``: the truncation
+        stop_gradients everything the forward produced, so this is exact),
+      * the (A, B) statistics reuse ``aux.r`` - gated by ``accumulate``,
+        which the stream server sets only in the frozen-reservoir phase
+        where the parameters producing ``aux.r`` are by construction the
+        post-update parameters.  (Accumulating during the adaptation phase
+        would be discarded at the phase boundary anyway - see
+        ``reset_statistics``.)
+
+    Returns (new state, logits (B, Ny), metrics).
+    """
+    f = cfg.f()
+    j_seq = masking.apply_mask(mask, u)
+    onehot = jax.nn.one_hot(label, cfg.n_classes, dtype=cfg.dtype)
+    aux = backprop.forward(state.params, j_seq, f, lengths=length)
+
+    w = weight.astype(cfg.dtype)
+    loss_fn = lambda lg, oh: w * backprop.loss_from_logits(lg, oh)  # noqa: E731
+    loss, g = backprop.grads_truncated_from_aux(
+        state.params, aux, onehot, f, loss_fn=loss_fn
+    )
+    n_live = jnp.maximum(jnp.sum(w), 1.0)
+    inv = 1.0 / n_live
+    params = backprop.apply_sgd(state.params, g, lr, lr, inv_batch=inv)
+
+    acc = accumulate.astype(cfg.dtype)
+    rt = dprr.r_tilde(aux.r) * (w * acc)[:, None]
+    dA, dB = ridge.accumulate_ab(
+        jnp.zeros_like(state.ridge.A), jnp.zeros_like(state.ridge.B), rt, onehot
+    )
+    new = OnlineState(
+        params=params,
+        ridge=RidgeState(
+            A=state.ridge.A + dA,
+            B=state.ridge.B + dB,
+            count=state.ridge.count
+            + (acc * jnp.sum(w)).astype(state.ridge.count.dtype),
+        ),
+        step=state.step + 1,
+        loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
+    )
+    hits = (jnp.argmax(aux.logits, -1) == label).astype(jnp.float32) * w
+    metrics = {"loss": loss * inv, "acc": jnp.sum(hits) * inv}
+    return new, aux.logits, metrics
+
+
+def refresh_output(
+    state: OnlineState, beta: Array, method: str = "cholesky_blocked"
+) -> OnlineState:
+    """Ridge re-solve of the output layer from the streamed (A, B)."""
+    Wt = ridge.ridge_solve(
+        state.ridge.A, ridge.regularize(state.ridge.B, beta), method
+    )
+    params = DFRParams(
+        p=state.params.p, q=state.params.q, W=Wt[:, :-1], b=Wt[:, -1]
+    )
+    return dataclasses.replace(state, params=params)
+
+
+def refresh_output_batched(state: OnlineState, beta: Array) -> OnlineState:
+    """Batched Ridge refresh over a leading member/slot axis.
+
+    One batched Cholesky factors every member's (s, s) system in a single
+    XLA program (``ridge.ridge_cholesky_batched``) - the stream server's
+    periodic refresh of all live slots is one call, not a slot loop.
+    """
+    Wt = ridge.ridge_cholesky_batched(
+        state.ridge.A, ridge.regularize(state.ridge.B, beta)
+    )
+    params = DFRParams(
+        p=state.params.p, q=state.params.q, W=Wt[..., :, :-1], b=Wt[..., :, -1]
+    )
+    return dataclasses.replace(state, params=params)
+
+
+def ensemble_logical_axes() -> OnlineState:
+    """Logical-axis pytree of an ensemble ``OnlineState`` for the sharding
+    rule table: every leaf leads with the ``member`` axis (sharded across
+    devices - members are embarrassingly parallel), trailing dims
+    replicated.  Feed to ``repro.distributed.sharding.guarded_shardings``.
+    """
+    return OnlineState(
+        params=DFRParams(
+            p=("member",), q=("member",),
+            W=("member", None, None), b=("member", None),
+        ),
+        ridge=RidgeState(
+            A=("member", None, None), B=("member", None, None),
+            count=("member",),
+        ),
+        step=("member",),
+        loss_ema=("member",),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-stream wrapper (the paper's one-device system)
+# ---------------------------------------------------------------------------
+
+
 class OnlineDFR:
     """Fused online train/infer stepper for a fixed-length stream window."""
 
@@ -59,70 +339,174 @@ class OnlineDFR:
         self.mask = mask
 
     def init(self) -> OnlineState:
-        cfg = self.cfg
-        return OnlineState(
-            params=DFRParams.init(cfg),
-            ridge=RidgeState.zeros(cfg.s, cfg.n_classes, cfg.dtype),
-            step=jnp.zeros((), jnp.int32),
-            loss_ema=jnp.zeros((), cfg.dtype),
-        )
+        return init_state(self.cfg)
 
-    @partial(jax.jit, static_argnames=("self",))
+    @partial(jax.jit, static_argnames=("self", "axis_names"))
     def step(
         self,
         state: OnlineState,
-        u: Array,        # (B, T, n_in) window of streamed samples
-        length: Array,   # (B,)
-        label: Array,    # (B,) int32
+        u: Array,
+        length: Array,
+        label: Array,
         lr_res: Array,
         lr_out: Array,
+        axis_names: Sequence[str] = (),
     ) -> Tuple[OnlineState, dict]:
         """One online training step: SGD update + (A, B) accumulation."""
-        cfg = self.cfg
-        f = cfg.f()
-        j_seq = masking.apply_mask(self.mask, u)
-        onehot = jax.nn.one_hot(label, cfg.n_classes, dtype=cfg.dtype)
-        loss, g = backprop.grads_truncated(state.params, j_seq, onehot, f, lengths=length)
-        bsz = u.shape[0]
-        inv = 1.0 / bsz
-        params = backprop.apply_sgd(state.params, g, lr_res, lr_out, inv_batch=inv)
-        # streaming sufficient statistics with the *updated* reservoir params
-        x = reservoir.run_reservoir(params.p, params.q, j_seq, f=f, lengths=length)
-        r = dprr.compute_dprr(x, lengths=length)
-        rt = dprr.r_tilde(r)
-        A, B = ridge.accumulate_ab(state.ridge.A, state.ridge.B, rt, onehot)
-        new = OnlineState(
-            params=params,
-            ridge=RidgeState(A=A, B=B, count=state.ridge.count + bsz),
-            step=state.step + 1,
-            loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
+        return online_step(
+            self.cfg, self.mask, state, u, length, label, lr_res, lr_out,
+            axis_names=axis_names,
         )
-        logits = r @ params.W.T + params.b
-        metrics = {
-            "loss": loss * inv,
-            "acc": jnp.mean((jnp.argmax(logits, -1) == label).astype(jnp.float32)),
-        }
-        return new, metrics
 
     @partial(jax.jit, static_argnames=("self",))
     def infer(self, state: OnlineState, u: Array, length: Array) -> Array:
         """Inference on a window: class predictions (B,)."""
-        cfg = self.cfg
-        f = cfg.f()
-        j_seq = masking.apply_mask(self.mask, u)
-        x = reservoir.run_reservoir(state.params.p, state.params.q, j_seq, f=f, lengths=length)
-        r = dprr.compute_dprr(x, lengths=length)
-        return jnp.argmax(r @ state.params.W.T + state.params.b, axis=-1)
+        return online_infer(self.cfg, self.mask, state, u, length)
 
     @partial(jax.jit, static_argnames=("self", "method"))
     def refresh_output(
         self, state: OnlineState, beta: Array, method: str = "cholesky_blocked"
     ) -> OnlineState:
         """Ridge re-solve of the output layer from the streamed (A, B)."""
-        Wt = ridge.ridge_solve(
-            state.ridge.A, ridge.regularize(state.ridge.B, beta), method
+        return refresh_output(state, beta, method)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def reset_statistics(self, state: OnlineState) -> OnlineState:
+        """Restart the (A, B) accumulation (phase switch)."""
+        return reset_statistics(state)
+
+
+# ---------------------------------------------------------------------------
+# Population-parallel online ensemble
+# ---------------------------------------------------------------------------
+
+
+class OnlineEnsemble:
+    """K independent online DFR members vmapped over the member axis.
+
+    All members share the fixed random mask (so the masked input j(k) is
+    computed once per member by the same program) and see the same stream;
+    they differ in their (p, q) seeds - member 0 is the exact paper init,
+    members 1..K-1 are log-normal-jittered clones (``candidates.
+    seed_candidates``).  ``step``/``infer_members`` are one vmapped jitted
+    program over the member axis; ``infer`` combines members by averaging
+    softmax probabilities (majority-of-evidence vote).
+
+    ``cull`` applies the offline population engine's selection protocol to
+    the live ensemble: members are ranked by loss EMA, losers are re-seeded
+    near survivors with jittered (p, q) (``candidates.survivor_parents`` /
+    ``candidates.jitter_clones``), and the re-seeded slots' Ridge statistics
+    are restarted (their features changed, so the old (A, B) are stale -
+    the online analogue of the offline engine re-evaluating from scratch).
+
+    A K=1 ensemble is numerically identical to ``OnlineDFR`` step-for-step
+    (the parity oracle in tests/test_stream_server.py).
+    """
+
+    def __init__(
+        self,
+        cfg: DFRConfig,
+        n_members: int,
+        mask: Optional[Array] = None,
+        seed: int = 0,
+        seed_jitter: float = 0.1,
+    ):
+        self.cfg = cfg
+        self.n_members = int(n_members)
+        self.seed = seed
+        self.seed_jitter = seed_jitter
+        if mask is None:
+            mask = masking.make_mask(
+                jax.random.PRNGKey(cfg.mask_seed), cfg.n_nodes, cfg.n_in, cfg.dtype
+            )
+        self.mask = mask
+
+    def init(self, key: Optional[Array] = None) -> OnlineState:
+        """Stacked ensemble state: every leaf leads with the K member axis."""
+        cfg, k = self.cfg, self.n_members
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+        ps, qs = candidates.seed_candidates(
+            key, k, cfg.p_init, cfg.q_init, self.seed_jitter, dtype=cfg.dtype
         )
-        params = DFRParams(
-            p=state.params.p, q=state.params.q, W=Wt[:, :-1], b=Wt[:, -1]
+        single = init_state(cfg)
+        stacked = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf, (k, *leaf.shape)), single
         )
-        return dataclasses.replace(state, params=params)
+        params = DFRParams(p=ps, q=qs, W=stacked.params.W, b=stacked.params.b)
+        return dataclasses.replace(stacked, params=params)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def step(
+        self,
+        state: OnlineState,
+        u: Array,
+        length: Array,
+        label: Array,
+        lr_res: Array,
+        lr_out: Array,
+    ) -> Tuple[OnlineState, dict]:
+        """All K members train on the shared window in one vmapped program;
+        metrics come back per-member, shape (K,)."""
+        return jax.vmap(
+            lambda st: online_step(
+                self.cfg, self.mask, st, u, length, label, lr_res, lr_out
+            )
+        )(state)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def logits_members(self, state: OnlineState, u: Array, length: Array) -> Array:
+        """Per-member logits (K, B, Ny)."""
+        return jax.vmap(
+            lambda st: online_logits(self.cfg, self.mask, st, u, length)
+        )(state)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def infer_members(self, state: OnlineState, u: Array, length: Array) -> Array:
+        """Per-member predictions (K, B) (the K=1 parity surface)."""
+        return jnp.argmax(self.logits_members(state, u, length), axis=-1)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def infer(self, state: OnlineState, u: Array, length: Array) -> Array:
+        """Ensemble predictions (B,): mean of member softmax probabilities.
+
+        For K=1 this reduces to argmax of the single member's logits
+        (softmax is monotone per row), preserving OnlineDFR parity.
+        """
+        probs = jax.nn.softmax(self.logits_members(state, u, length), axis=-1)
+        return jnp.argmax(jnp.mean(probs, axis=0), axis=-1)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def refresh_output(self, state: OnlineState, beta: Array) -> OnlineState:
+        """Batched Ridge refresh of every member (one batched Cholesky)."""
+        return refresh_output_batched(state, beta)
+
+    @partial(jax.jit, static_argnames=("self", "survive_frac", "jitter"))
+    def cull(
+        self,
+        state: OnlineState,
+        key: Array,
+        survive_frac: float = 0.5,
+        jitter: float = 0.15,
+    ) -> OnlineState:
+        """Rank members by loss EMA, re-seed the losers near survivors.
+
+        Survivors keep everything; each culled slot inherits its parent's
+        full state, gets jittered (p, q), and restarts its Ridge statistics
+        (stale under the moved reservoir parameters).
+        """
+        parent, keep, _ = candidates.survivor_parents(
+            state.loss_ema, survive_frac
+        )
+        inherited = jax.tree_util.tree_map(lambda leaf: leaf[parent], state)
+        new_p, new_q = candidates.jitter_clones(
+            key, inherited.params.p, inherited.params.q, keep, jitter
+        )
+        params = dataclasses.replace(inherited.params, p=new_p, q=new_q)
+
+        def _keep_or_zero(leaf):
+            k_mask = keep.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            return jnp.where(k_mask, leaf, jnp.zeros_like(leaf))
+
+        ridge_state = jax.tree_util.tree_map(_keep_or_zero, inherited.ridge)
+        return dataclasses.replace(inherited, params=params, ridge=ridge_state)

@@ -23,7 +23,10 @@ program:
                                  the population, scanned over minibatches.
   4. ``cull_population``       - NRMSE-ranked selection: survivors keep their
                                  parameters, culled slots are re-seeded with
-                                 log-space-jittered clones of the survivors.
+                                 log-space-jittered clones of the survivors
+                                 (the seeding/culling primitives live in
+                                 ``repro.core.candidates``, shared with the
+                                 online ensemble; re-exported here).
   5. ``train_population``      - the round driver (evaluate -> cull ->
                                  refine -> evaluate), with elitist tracking:
                                  the best member ever evaluated is returned,
@@ -54,6 +57,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backprop, dprr, masking, reservoir, ridge
+from repro.core.candidates import (  # noqa: F401  (shared candidate machinery,
+    P_LOG_RANGE,                     # re-exported for compatibility - the
+    Q_LOG_RANGE,                     # online ensemble imports the same
+    cull_population,                 # primitives from repro.core.candidates)
+    grid_candidates,
+    grid_points,
+    init_population,
+)
 from repro.core.types import (
     Array,
     DFRConfig,
@@ -61,47 +72,6 @@ from repro.core.types import (
     RegressionBatch,
     TimeSeriesBatch,
 )
-
-P_LOG_RANGE = (-3.75, -0.25)  # paper Sec. 4.1 search box, log10
-Q_LOG_RANGE = (-2.75, -0.25)
-
-
-# ---------------------------------------------------------------------------
-# Grid seeding
-# ---------------------------------------------------------------------------
-
-
-def grid_points(divs: int, lo: float, hi: float) -> np.ndarray:
-    """``divs`` equidistant points in log10 space, inclusive of endpoints."""
-    if divs == 1:
-        return np.array([10.0 ** ((lo + hi) / 2.0)])
-    return 10.0 ** np.linspace(lo, hi, divs)
-
-
-def grid_candidates(
-    divs: int,
-    p_range: Tuple[float, float] = P_LOG_RANGE,
-    q_range: Tuple[float, float] = Q_LOG_RANGE,
-    dtype=jnp.float32,
-) -> Tuple[Array, Array]:
-    """K = divs^2 grid-seeded (p, q) pairs, in ``itertools.product`` order
-    (p-major), matching the serial grid search's iteration order so rankings
-    and tie-breaks line up exactly."""
-    ps = grid_points(divs, *p_range)
-    qs = grid_points(divs, *q_range)
-    pp, qq = np.meshgrid(ps, qs, indexing="ij")
-    return jnp.asarray(pp.reshape(-1), dtype), jnp.asarray(qq.reshape(-1), dtype)
-
-
-def init_population(cfg: DFRConfig, ps: Array, qs: Array) -> DFRParams:
-    """Stacked population pytree from (K,) candidate vectors."""
-    k = ps.shape[0]
-    return DFRParams(
-        p=ps.astype(cfg.dtype),
-        q=qs.astype(cfg.dtype),
-        W=jnp.zeros((k, cfg.n_classes, cfg.n_rep), cfg.dtype),
-        b=jnp.zeros((k, cfg.n_classes), cfg.dtype),
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -275,43 +245,6 @@ def refine_population(
         return params_k, losses[-1]
 
     return jax.vmap(member)(pop)
-
-
-# ---------------------------------------------------------------------------
-# NRMSE-ranked selection / culling
-# ---------------------------------------------------------------------------
-
-
-def cull_population(
-    pop: DFRParams,
-    fitness: Array,
-    key: Array,
-    survive_frac: float = 0.5,
-    jitter: float = 0.15,
-    p_range: Tuple[float, float] = P_LOG_RANGE,
-    q_range: Tuple[float, float] = Q_LOG_RANGE,
-) -> DFRParams:
-    """Replace the worst members with jittered clones of the best.
-
-    ``fitness`` is (K,), lower-is-better (NRMSE, or -accuracy).  The top
-    ``ceil(K * survive_frac)`` members survive verbatim (rank order); each
-    culled slot is re-seeded from a survivor (cycled) with multiplicative
-    log-normal jitter on (p, q), clipped back into the search box.  K stays
-    constant so every downstream program keeps its static shapes.
-    """
-    k = fitness.shape[0]
-    n_keep = max(1, min(k, int(np.ceil(k * survive_frac))))
-    order = jnp.argsort(fitness)  # ascending: best first
-    parent = jnp.concatenate(
-        [order[:n_keep], order[jnp.arange(k - n_keep) % n_keep]]
-    )
-    eps = jax.random.normal(key, (2, k), pop.p.dtype)
-    scale = jnp.where(jnp.arange(k) < n_keep, 0.0, jitter)
-    new_p = pop.p[parent] * jnp.exp(scale * eps[0])
-    new_q = pop.q[parent] * jnp.exp(scale * eps[1])
-    new_p = jnp.clip(new_p, 10.0 ** p_range[0], 10.0 ** p_range[1])
-    new_q = jnp.clip(new_q, 10.0 ** q_range[0], 10.0 ** q_range[1])
-    return DFRParams(p=new_p, q=new_q, W=pop.W[parent], b=pop.b[parent])
 
 
 # ---------------------------------------------------------------------------

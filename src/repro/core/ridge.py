@@ -387,12 +387,11 @@ def ridge_cholesky_batched(A: Array, B: Array) -> Array:
     handled by the batched LAPACK/XLA primitives.
     """
     C = jnp.linalg.cholesky(B)  # (K, s, s), natively batched
-
-    def _member(c: Array, a: Array) -> Array:
-        d = jax.scipy.linalg.solve_triangular(c, a.T, lower=True).T
-        return jax.scipy.linalg.solve_triangular(c.T, d.T, lower=False).T
-
-    return jax.vmap(_member)(C, A)
+    # natively-batched cho_solve (B X = A^T) instead of a vmap of per-member
+    # TRSM pairs: one batched triangular-solve primitive for the whole K axis
+    # (measurably faster on CPU, where the vmapped path lowers poorly)
+    X = jax.scipy.linalg.cho_solve((C, True), jnp.swapaxes(A, -1, -2))
+    return jnp.swapaxes(X, -1, -2)
 
 
 def ridge_solve_batched(A: Array, B: Array, method: str = "cholesky_blocked") -> Array:

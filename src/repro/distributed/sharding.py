@@ -9,7 +9,8 @@ resolve to nothing), one pod (data=16, model=16), or multi-pod
 Default placement (MaxText-style FSDP+TP hybrid):
     vocab / heads / kv / mlp / expert_mlp -> "model"   (tensor parallel)
     embed / expert                        -> "data"    (FSDP weight shard)
-    batch                                 -> ("pod", "data") for activations
+    batch / member                        -> ("pod", "data") for activations
+                                             and ensemble member states
     layers / head_dim / seq / state       -> replicated
 
 A ``MeshContext`` (set by the launcher) makes ``shard_act`` constraints
@@ -41,6 +42,11 @@ DEFAULT_RULES: Rules = {
     "embed_no_shard": None,
     "expert": "data",
     "batch": ("pod", "data"),
+    # ensemble member axis (repro.core.online.OnlineEnsemble): members are
+    # embarrassingly parallel, so the K axis shards like data; per-member
+    # (A, B)/grad reductions stay *within* a member (no collective over
+    # 'member' - only the batch-sharded online_step psums over data_axes()).
+    "member": ("pod", "data"),
     "act_model": "model",
     "kv_alt": "model",
     "layers": None,

@@ -24,6 +24,7 @@ from repro.kernels.dprr import dprr_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.reservoir import reservoir_pallas
 from repro.kernels.ridge_solve import ridge_solve_blocked, cholesky_blocked
+from repro.kernels.streaming import streaming_step_pallas
 
 
 def _auto_backend(backend: Optional[str]) -> str:
@@ -39,6 +40,20 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def _ring_padded(q: jax.Array, nx: int, n_pad: int):
+    """Ring-padded (L, qpow) for the reservoir/streaming kernels: zero-pad
+    to n_pad and mirror the true last node into the last padded lane so the
+    in-kernel ring wrap ``x_prev[:, -1:]`` reads node Nx-1 (see
+    kernels/reservoir.py docstring)."""
+    Lq = core_res.ring_matrix(q, nx, jnp.float32)
+    qpow = core_res.ring_powers(q, nx, jnp.float32)
+    Lp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:nx, :nx].set(Lq)
+    Lp = Lp.at[n_pad - 1, :nx].set(Lq[nx - 1])
+    qp = jnp.zeros((n_pad,), jnp.float32).at[:nx].set(qpow)
+    qp = qp.at[n_pad - 1].set(qpow[nx - 1])
+    return Lp, qp
 
 
 # ---------------------------------------------------------------------------
@@ -107,14 +122,7 @@ def reservoir_states(
     n_pad = max(128, -(-nx // 128) * 128)
     jp = _pad_to(_pad_to(_pad_to(j_seq, 2, n_pad), 1, chunk_t), 0, block_b)
     bp, tp = jp.shape[0], jp.shape[1]
-    # ring-padded L/qpow: row n_pad-1 mirrors row Nx-1 so the kernel's
-    # x_prev[:, -1] reads the true last node (kernels/reservoir.py docstring)
-    Lq = core_res.ring_matrix(q, nx, jnp.float32)
-    qpow = core_res.ring_powers(q, nx, jnp.float32)
-    Lp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:nx, :nx].set(Lq)
-    Lp = Lp.at[n_pad - 1, :nx].set(Lq[nx - 1])
-    qp = jnp.zeros((n_pad,), jnp.float32).at[:nx].set(qpow)
-    qp = qp.at[n_pad - 1].set(qpow[nx - 1])
+    Lp, qp = _ring_padded(q, nx, n_pad)
     x0 = jnp.zeros((bp, n_pad), jnp.float32)
     lens = _pad_to(lengths.astype(jnp.int32), 0, block_b)
     xs = reservoir_pallas(
@@ -123,6 +131,65 @@ def reservoir_states(
         interpret=(backend == "interpret"),
     )
     return xs[:b, :t, :nx]
+
+
+# ---------------------------------------------------------------------------
+# Fused streaming step (reservoir -> DPRR -> readout, one kernel call)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "f", "chunk_t", "backend")
+)
+def streaming_logits(
+    j_seq: jax.Array,      # (B, T, Nx) masked inputs
+    lengths: jax.Array,    # (B,) int32
+    p: jax.Array,
+    q: jax.Array,
+    W: jax.Array,          # (Ny, Nr) readout weights
+    b: jax.Array,          # (Ny,) readout bias
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    chunk_t: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Batched readout logits (B, Ny) in one fused kernel call.
+
+    The serving path's infer-before-update: reservoir scan, DPRR
+    accumulation and the readout contraction run back to back with the
+    recurrent state and the accumulator tile resident in VMEM - the state
+    sequence X is never materialized (see kernels.streaming).
+
+    ``chunk_t=None`` sizes the sequential time chunk to the window (capped
+    at 128), so short serving windows don't pay for zero-padded kernel
+    steps; pass an explicit value to pin the chunking.
+    """
+    backend = _auto_backend(backend)
+    if backend == "xla":
+        return kref.streaming_logits_ref(j_seq, lengths, p, q, W, b, f=f)
+
+    bsz, t, nx = j_seq.shape
+    assert nx == n_nodes
+    if chunk_t is None:
+        chunk_t = min(128, -(-t // 8) * 8)
+    ny = W.shape[0]
+    n_pad = max(128, -(-nx // 128) * 128)
+    ny_pad = max(8, -(-ny // 8) * 8)
+    jp = _pad_to(_pad_to(j_seq, 2, n_pad), 1, chunk_t)
+    Lp, qp = _ring_padded(q, nx, n_pad)
+    # readout tile w3 in the accumulator's (i, j) layout: dot-product block
+    # at [:nx, :nx], sum block down the ones column j = nx
+    Wblk = W[:, : nx * nx].reshape(ny, nx, nx).astype(jnp.float32)
+    Wsum = W[:, nx * nx :].astype(jnp.float32)
+    w3 = jnp.zeros((ny_pad, n_pad, n_pad), jnp.float32)
+    w3 = w3.at[:ny, :nx, :nx].set(Wblk)
+    w3 = w3.at[:ny, :nx, nx].set(Wsum)
+    out = streaming_step_pallas(
+        jp, Lp, qp, lengths.astype(jnp.int32), p, q, w3, nx,
+        f=f, chunk_t=chunk_t, interpret=(backend == "interpret"),
+    )
+    return out[:, :ny] + b
 
 
 # ---------------------------------------------------------------------------

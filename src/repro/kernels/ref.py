@@ -76,6 +76,22 @@ def flash_attention_ref(
     return out.reshape(b, h, tq, d).astype(q.dtype)
 
 
+def streaming_logits_ref(
+    j_seq: jax.Array,      # (B, T, Nx) masked inputs (logical shapes)
+    lengths: jax.Array,    # (B,)
+    p: jax.Array,
+    q: jax.Array,
+    W: jax.Array,          # (Ny, Nr)
+    b: jax.Array,          # (Ny,)
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+) -> jax.Array:
+    """Oracle of kernels.streaming.streaming_step_pallas (+ bias): the
+    unfused reservoir -> DPRR -> readout composition on logical shapes."""
+    x = core_res.run_reservoir(p, q, j_seq, f=f, lengths=lengths)
+    r = core_dprr.compute_dprr(x, lengths=lengths)
+    return r @ W.T + b
+
+
 def reservoir_ref(
     j_seq: jax.Array,      # (B, T_pad, n_pad)
     x0: jax.Array,         # (B, n_pad)

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused single-window streaming step (paper Sec. 3.1).
+
+The latency-critical operation of the serving path is infer-before-update:
+for each freshly arrived window the system must produce predictions from
+the *current* parameters before the training update touches them.  The
+two-kernel composition (``kernels.reservoir`` then ``kernels.dprr``) round-
+trips the full state sequence X (B, T, Nx) through HBM between the two
+calls; this kernel fuses the whole read path
+
+    reservoir scan -> DPRR accumulation -> readout logits
+
+into ONE ``pallas_call``: the recurrent state (1, n_pad) and the DPRR
+accumulator tile (n_pad, n_pad) both live in VMEM scratch for the whole
+time loop, so X is never materialized anywhere - HBM traffic is one read
+of the masked inputs J plus one (ny_pad,) logits write per sample.  That
+is the TPU analogue of the paper's FPGA dataflow, where the reservoir,
+DPRR and output MACs are wired back to back with no DRAM in between.
+
+Grid: (batch, time_chunks); time is the minor (sequential) dimension so
+the scratch carries across chunks, re-initialized at chunk 0 of every
+sample.  The readout weights arrive pre-laid-out as a (ny_pad, n_pad,
+n_pad) tile w3 matching the accumulator's layout (``ops.streaming_logits``
+builds it): w3[y, i, j] = W[y, i*Nx + j] for the dot-product block and
+w3[y, i, Nx] = W[y, Nx^2 + i] for the sum block, so the final logits are
+one (1, n_pad^2) x (n_pad^2, ny_pad) MXU contraction of the flattened
+accumulator.  The bias is added by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _streaming_kernel(
+    len_ref,     # scalar prefetch: (B,) int32 valid lengths
+    j_ref,       # (chunk_t, 1, n_pad) masked inputs for this sample
+    L_ref,       # (n_pad, n_pad) ring matrix (zero padded, ring lane mirrored)
+    qpow_ref,    # (1, n_pad) ring powers
+    pq_ref,      # (1, 2) f32: [p, q] (q folded into L/qpow)
+    w3_ref,      # (ny_pad, n_pad, n_pad) readout tile
+    out_ref,     # (1, ny_pad) logits (written at the last time chunk)
+    state,       # VMEM scratch (1, n_pad) recurrent state
+    acc,         # VMEM scratch (n_pad, n_pad) DPRR accumulator
+    *,
+    f: Callable[[jax.Array], jax.Array],
+    chunk_t: int,
+    n_nodes: int,
+):
+    b = pl.program_id(0)
+    tc = pl.program_id(1)
+    n_pad = acc.shape[0]
+
+    @pl.when(tc == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)   # x(0) = 0 (paper Sec. 2.2)
+        acc[...] = jnp.zeros_like(acc)
+
+    p = pq_ref[0, 0]
+    Lt = L_ref[...].T
+    qpow = qpow_ref[...]
+    length = len_ref[b]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
+
+    def step(t, _):
+        x_prev = state[...]
+        j_k = j_ref[t, :, :]                      # (1, n_pad)
+        a = p * f(j_k + x_prev)
+        x_k = jax.lax.dot(a, Lt, preferred_element_type=jnp.float32) \
+            + x_prev[:, -1:] * qpow
+        k_global = tc * chunk_t + t
+        live = k_global < length
+        x_k = jnp.where(live, x_k, x_prev)        # freeze past valid length
+        # DPRR contribution of step k: x(k) . [x(k-1), 1]^T, masked to the
+        # true nodes; a frozen (dead) step contributes exactly zero, matching
+        # compute_dprr's row masking.
+        x1m = jnp.where((col < n_nodes) & live, x_k, 0.0)
+        x0_aug = jnp.where(
+            col < n_nodes, x_prev, jnp.where(col == n_nodes, 1.0, 0.0)
+        )
+        acc[...] += jax.lax.dot_general(
+            x1m, x0_aug,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        state[...] = x_k
+        return 0
+
+    jax.lax.fori_loop(0, chunk_t, step, 0)
+
+    @pl.when(tc == pl.num_programs(1) - 1)
+    def _readout():
+        flat = acc[...].reshape(1, n_pad * n_pad)
+        w = w3_ref[...].reshape(w3_ref.shape[0], n_pad * n_pad)
+        out_ref[...] = jax.lax.dot_general(
+            flat, w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def streaming_step_pallas(
+    j_seq: jax.Array,     # (B, T_pad, n_pad) f32; node padding must be zero
+    L: jax.Array,         # (n_pad, n_pad) ring matrix, zero padded + mirrored
+    qpow: jax.Array,      # (n_pad,)
+    lengths: jax.Array,   # (B,) int32
+    p: jax.Array,         # scalar
+    q: jax.Array,         # scalar
+    w3: jax.Array,        # (ny_pad, n_pad, n_pad) readout tile
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    chunk_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns raw logits (B, ny_pad) (bias not yet added).
+
+    Same ring-padding contract as ``kernels.reservoir.reservoir_pallas``:
+    L/qpow are built for the padded node count with the true last node
+    mirrored into the last padded lane (``ops.streaming_logits`` does this),
+    so the in-kernel ring wrap ``x_prev[:, -1:]`` reads node Nx-1.
+    """
+    b, t_pad, n_pad = j_seq.shape
+    ny_pad = w3.shape[0]
+    assert t_pad % chunk_t == 0, (t_pad, chunk_t)
+    assert n_pad % 128 == 0 and n_nodes < n_pad
+    jt = jnp.swapaxes(j_seq, 0, 1)  # (T, B, N): time-major for the grid
+
+    kernel = functools.partial(
+        _streaming_kernel, f=f, chunk_t=chunk_t, n_nodes=n_nodes
+    )
+    pq = jnp.stack([p.astype(jnp.float32), q.astype(jnp.float32)]).reshape(1, 2)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, t_pad // chunk_t),
+        in_specs=[
+            pl.BlockSpec((chunk_t, 1, n_pad), lambda bb, tc, len_ref: (tc, bb, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda bb, tc, len_ref: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda bb, tc, len_ref: (0, 0)),
+            pl.BlockSpec((1, 2), lambda bb, tc, len_ref: (0, 0)),
+            pl.BlockSpec((ny_pad, n_pad, n_pad), lambda bb, tc, len_ref: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ny_pad), lambda bb, tc, len_ref: (bb, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, n_pad), jnp.float32),
+            pltpu.VMEM((n_pad, n_pad), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, ny_pad), jnp.float32),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), jt, L, qpow.reshape(1, -1), pq, w3)

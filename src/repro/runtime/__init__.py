@@ -6,4 +6,6 @@ from repro.runtime.trainer import (  # noqa: F401
     TrainerConfig,
 )
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
+from repro.runtime.scheduler import SlotScheduler  # noqa: F401
 from repro.runtime.server import Server, Request  # noqa: F401
+from repro.runtime.stream_server import StreamRequest, StreamServer  # noqa: F401

@@ -1,0 +1,77 @@
+"""Continuous-batching slot scheduler shared by the serving runtimes.
+
+Both servers in this package keep a fixed number of *slots* so the jitted
+step never re-specializes:
+
+  * ``repro.runtime.server.Server``        - token decode slots (LM rows)
+  * ``repro.runtime.stream_server.StreamServer`` - sensor-stream slots
+    (per-slot ``OnlineState`` rows)
+
+The admission/retire lifecycle is identical - requests queue up, free slots
+are filled FIFO, finished slots retire into the completed list and are
+immediately refillable - so it lives here once.  Per-slot device state
+(decode cache rows, online-state rows) stays with the owning server; the
+scheduler invokes the server's ``on_admit`` / ``on_retire`` callbacks at
+the transitions so the server can reset exactly the affected row.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional, Tuple
+
+
+class SlotScheduler:
+    """Fixed-capacity slot pool with FIFO admission (continuous batching)."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: Deque[Any] = deque()
+        self.slots: List[Optional[Any]] = [None] * n_slots
+        self.completed: List[Any] = []
+
+    # -- queue -----------------------------------------------------------------
+
+    def submit(self, item: Any) -> None:
+        self.queue.append(item)
+
+    # -- slot transitions --------------------------------------------------------
+
+    def admit(
+        self, on_admit: Optional[Callable[[int, Any], None]] = None
+    ) -> List[int]:
+        """Fill every free slot from the queue (FIFO); returns the indices
+        admitted this round.  ``on_admit(slot, item)`` runs per admission so
+        the owner can reset the slot's device-state row."""
+        admitted = []
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                item = self.queue.popleft()
+                self.slots[i] = item
+                if on_admit is not None:
+                    on_admit(i, item)
+                admitted.append(i)
+        return admitted
+
+    def retire(
+        self, i: int, on_retire: Optional[Callable[[int, Any], None]] = None
+    ) -> Any:
+        """Free slot ``i`` into the completed list (it refills on the next
+        ``admit`` - continuous batching)."""
+        item = self.slots[i]
+        if item is None:
+            raise ValueError(f"retire of empty slot {i}")
+        self.slots[i] = None
+        self.completed.append(item)
+        if on_retire is not None:
+            on_retire(i, item)
+        return item
+
+    # -- views -------------------------------------------------------------------
+
+    def live(self) -> List[Tuple[int, Any]]:
+        """(slot index, item) for every occupied slot."""
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def active(self) -> bool:
+        """True while anything is in flight or waiting."""
+        return any(s is not None for s in self.slots) or bool(self.queue)

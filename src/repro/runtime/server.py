@@ -1,8 +1,10 @@
 """Batched inference server: continuous-batching decode loop.
 
 A minimal-but-real serving runtime:
-  * requests queue up with prompts; the scheduler packs up to ``max_batch``
-    concurrent sequences into the fixed decode batch (padding unused rows),
+  * requests queue up with prompts; the slot scheduler
+    (``repro.runtime.scheduler.SlotScheduler``, shared with the DFR stream
+    server) packs up to ``max_batch`` concurrent sequences into the fixed
+    decode batch (padding unused rows),
   * prefill runs chunk-wise through the decode path (token-by-token for
     recurrent archs; chunked cache append for attention archs),
   * each decode step emits one token for every live row; finished rows
@@ -18,14 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Transformer
+from repro.runtime.scheduler import SlotScheduler
 
 
 @dataclasses.dataclass
@@ -53,26 +55,28 @@ class Server:
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.queue: Deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.sched = SlotScheduler(max_batch)
         self.slot_pos = np.zeros(max_batch, np.int32)   # tokens consumed
         self.cache = model.init_cache(max_batch, max_len)
         self._decode = jax.jit(model.decode_step)
-        self.completed: List[Request] = []
+
+    @property
+    def slots(self):
+        return self.sched.slots
+
+    @property
+    def completed(self) -> List[Request]:
+        return self.sched.completed
 
     def submit(self, req: Request):
         req.submit_t = time.perf_counter()
-        self.queue.append(req)
+        self.sched.submit(req)
 
     # -- scheduling --------------------------------------------------------------
 
-    def _admit(self):
-        for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = req
-                self.slot_pos[i] = 0
-                self._reset_row(i)
+    def _on_admit(self, i: int, req: Request):
+        self.slot_pos[i] = 0
+        self._reset_row(i)
 
     def _reset_row(self, i: int):
         """Zero row i of every per-row cache buffer (slot reuse)."""
@@ -85,19 +89,14 @@ class Server:
 
         self.cache = jax.tree_util.tree_map(zero_row, self.cache)
 
-    def _active(self) -> bool:
-        return any(s is not None for s in self.slots) or bool(self.queue)
-
     # -- the decode loop -----------------------------------------------------------
 
     def step(self):
         """One global decode step: feeds each live row its next input token
         (prompt token during prefill phase, else the last sampled token)."""
-        self._admit()
+        self.sched.admit(self._on_admit)
         tok = np.zeros((self.max_batch, 1), np.int32)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+        for i, req in self.sched.live():
             pos = self.slot_pos[i]
             if pos < len(req.prompt):
                 tok[i, 0] = req.prompt[pos]          # prefill phase
@@ -105,9 +104,7 @@ class Server:
                 tok[i, 0] = req.out_tokens[-1]       # decode phase
         logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+        for i, req in self.sched.live():
             self.slot_pos[i] += 1
             if self.slot_pos[i] >= len(req.prompt):
                 req.out_tokens.append(int(nxt[i]))
@@ -118,12 +115,11 @@ class Server:
                 ):
                     req.done = True
                     req.finish_t = time.perf_counter()
-                    self.completed.append(req)
-                    self.slots[i] = None   # continuous batching: slot refills
+                    self.sched.retire(i)   # continuous batching: slot refills
 
     def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
         steps = 0
-        while self._active() and steps < max_steps:
+        while self.sched.active() and steps < max_steps:
             self.step()
             steps += 1
-        return self.completed
+        return self.sched.completed

@@ -1,0 +1,366 @@
+"""Continuous-batching stream server: train-while-serve for sensor streams.
+
+This is the serving runtime for the paper's actual deployment scenario
+(Sec. 3.1): many independent sensor streams (predictive maintenance, ECG
+monitors, ...) each need an online DFR that (a) answers every window from
+the parameters it had *before* seeing the labels (infer-before-update, the
+honest online metric) and (b) keeps adapting - truncated-bp SGD on
+(p, q, W, b) while the reservoir is still settling, then frozen-reservoir
+(A, B) accumulation with periodic Ridge refreshes of the output layer.
+
+Mapping to paper Sec. 3.1, per slot:
+
+    window arrives -> fused reservoir -> DPRR -> readout   (inference;
+                      optionally the one-kernel path in kernels.streaming)
+                   -> truncated-bp SGD update of (p, q, W, b)   [phase 1,
+                      while slot_step < phase_steps: Fig. 2's training mode]
+                   -> streaming (A, B) accumulation (Eq. 21-22, 38)
+                   -> at the phase boundary: reset_statistics (features
+                      moved under SGD, so the stats restart - Sec. 3.6's
+                      requirement that Ridge sees consistent features)
+                   -> every refresh_every server steps: batched Cholesky
+                      re-solve of every live slot's output layer (Eq. 39-41)
+
+The scaling idea is the same one the token server uses for LM decode
+(``repro.runtime.server``), with the shared slot scheduler
+(``repro.runtime.scheduler.SlotScheduler``): a fixed number of slots, each
+holding one stream's ``OnlineState`` as row s of a single batched state
+pytree.  One jitted fixed-shape step advances ALL live slots - per-slot
+learning-rate phase, per-sample validity weights for tail windows, dead
+slots frozen by a lane mask - so XLA never re-specializes as streams
+retire and refill (continuous batching).  Per-slot state isolation is
+structural: every lane of the vmapped step reads only its own state row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masking
+from repro.core.online import (
+    OnlineState,
+    init_state,
+    online_serve_step,
+    refresh_output_batched,
+)
+from repro.core.types import Array, DFRConfig
+from repro.kernels import ops
+from repro.runtime.scheduler import SlotScheduler
+
+
+@dataclasses.dataclass
+class StreamRequest:
+    """One sensor stream: N labeled samples served window-by-window."""
+
+    rid: int
+    u: np.ndarray             # (N, T, n_in) float32 samples
+    length: np.ndarray        # (N,) int32 valid lengths
+    label: np.ndarray         # (N,) int32 labels
+    preds: List[int] = dataclasses.field(default_factory=list)
+    correct: int = 0
+    done: bool = False
+    submit_t: float = 0.0
+    finish_t: float = 0.0
+    final_state: Optional[OnlineState] = None   # snapshot at retirement
+
+    @property
+    def n_samples(self) -> int:
+        return self.u.shape[0]
+
+    @property
+    def online_accuracy(self) -> float:
+        """Rolling infer-before-update accuracy over the served stream."""
+        return self.correct / max(1, len(self.preds))
+
+
+# ---------------------------------------------------------------------------
+# The fixed-shape jitted step (all slots at once)
+# ---------------------------------------------------------------------------
+
+
+def _bcast_to(mask1d: Array, leaf: Array) -> Array:
+    return mask1d.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+@partial(jax.jit, static_argnames=("cfg", "fused_infer"))
+def _stream_step(
+    cfg: DFRConfig,
+    mask: Array,
+    states: OnlineState,   # leading slot axis S on every leaf
+    fresh: OnlineState,    # single-system state (no S axis): admission reset
+    fresh_mask: Array,     # (S,) bool: slots admitted this step
+    u: Array,              # (S, W, T, n_in)
+    length: Array,         # (S, W) int32
+    label: Array,          # (S, W) int32
+    weight: Array,         # (S, W) f32 0/1 live-sample mask (tail windows)
+    live: Array,           # (S,) bool live-slot mask
+    lr: Array,             # scalar base learning rate
+    phase_steps: Array,    # scalar int32: slot steps of reservoir adaptation
+    fused_infer: bool = True,
+) -> Tuple[OnlineState, Array, Dict[str, Array]]:
+    """One server step: infer-before-update + train for every live slot.
+
+    Returns (new states, predictions (S, W), per-slot metrics).  Dead slots
+    compute garbage in their lanes (fixed shapes) and are frozen by the
+    ``live`` mask; the host never reads their predictions.  Slot admission
+    (resetting row s to the fresh single-system state) happens in-program
+    via ``fresh_mask`` so slot churn costs zero extra dispatches.
+
+    The heart is ``online_serve_step`` vmapped over the slot axis: ONE
+    forward pass per slot window feeds the infer-before-update predictions,
+    the truncated-BP gradients AND the frozen-phase (A, B) accumulation -
+    the fusion a pair of separate infer/step calls cannot express.  Because
+    the statistics only accumulate in the frozen phase, the phase-boundary
+    ``reset_statistics`` of the single-stream protocol is a no-op here
+    (phase-1 stats are never written in the first place).
+    """
+    f = cfg.f()
+
+    # continuous batching: admitted slots start from the fresh state.  The
+    # select copies the whole batched state (the (S, s, s) B leaf dominates),
+    # so it is cond-gated: steady-state steps with no admissions skip it.
+    def _admit(st):
+        return jax.tree_util.tree_map(
+            lambda batched, single: jnp.where(
+                _bcast_to(fresh_mask, batched), single[None], batched
+            ),
+            st, fresh,
+        )
+
+    states = jax.lax.cond(jnp.any(fresh_mask), _admit, lambda st: st, states)
+
+    # per-slot learning-rate phase: adapt (p, q, W, b) while the slot is
+    # young, then freeze the reservoir for consistent Ridge features; the
+    # (A, B) statistics accumulate only in the frozen phase
+    in_phase1 = states.step < phase_steps
+    lr_slot = jnp.where(in_phase1, lr, 0.0).astype(cfg.dtype)
+    acc_slot = jnp.where(in_phase1, 0.0, 1.0).astype(cfg.dtype)
+
+    new_states, logits, metrics = jax.vmap(
+        lambda st, u_s, len_s, y_s, w_s, lr_s, a_s: online_serve_step(
+            cfg, mask, st, u_s, len_s, y_s, lr_s, w_s, a_s
+        )
+    )(states, u, length, label, weight, lr_slot, acc_slot)
+
+    if fused_infer:
+        # route inference through the fused streaming kernel
+        # (kernels.streaming: reservoir -> DPRR -> readout in one kernel
+        # call, the TPU latency path; its XLA ref is the same math as the
+        # shared forward, so on CPU this only adds the extra pass)
+        j_seq = masking.apply_mask(mask, u)
+        logits = jax.vmap(
+            lambda j_s, len_s, st: ops.streaming_logits(
+                j_s, len_s, st.params.p, st.params.q, st.params.W,
+                st.params.b, cfg.n_nodes, f=f,
+            )
+        )(j_seq, length, states)
+    preds = jnp.argmax(logits, axis=-1)  # (S, W)
+
+    # dead slots keep their state untouched (cond-gated like admission:
+    # a fully-live step - the steady state - pays no copy)
+    new_states = jax.lax.cond(
+        jnp.all(live),
+        lambda pair: pair[0],
+        lambda pair: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(_bcast_to(live, n), n, o), *pair
+        ),
+        (new_states, states),
+    )
+    return new_states, preds, metrics
+
+
+@jax.jit
+def _snapshot_slot(states: OnlineState, i: Array) -> OnlineState:
+    """Slot row i of the batched state as a single-system state (one
+    dispatch for the whole tree; module-level so servers share the cache)."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[i], states)
+
+
+@partial(jax.jit, static_argnames=())
+def _stream_refresh(
+    states: OnlineState, beta: Array, eligible: Array
+) -> OnlineState:
+    """Batched Ridge refresh of the eligible slots (one batched Cholesky).
+
+    ``eligible`` (S,) marks live slots past the phase boundary with at
+    least one accumulated sample; others keep their readout (solving a
+    zero-stats system would zero a trained W).
+    """
+    refreshed = refresh_output_batched(states, beta)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(
+            eligible.reshape((-1,) + (1,) * (a.ndim - 1)), a, b
+        ),
+        refreshed, states,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+
+
+class StreamServer:
+    """Continuous-batching train-while-serve runtime for DFR streams.
+
+    Fixed shapes everywhere: ``max_streams`` slots, ``window`` samples per
+    slot per step, samples padded to ``t_max`` timesteps.  Requests whose
+    sample count is not a multiple of ``window`` get a zero-weighted tail
+    (exact: dead samples contribute nothing - see ``online_step``).
+    """
+
+    def __init__(
+        self,
+        cfg: DFRConfig,
+        t_max: int,
+        max_streams: int = 8,
+        window: int = 4,
+        lr: float = 0.2,
+        phase_steps: int = 8,
+        refresh_every: int = 5,
+        beta: float = 1e-2,
+        mask: Optional[Array] = None,
+        fused_infer: Optional[bool] = None,
+    ):
+        self.cfg = cfg
+        self.t_max = int(t_max)
+        self.max_streams = int(max_streams)
+        self.window = int(window)
+        self.lr = jnp.asarray(lr, cfg.dtype)
+        self.phase_steps = jnp.asarray(phase_steps, jnp.int32)
+        self.refresh_every = int(refresh_every)
+        self.beta = jnp.asarray(beta, cfg.dtype)
+        if fused_infer is None:
+            # TPU: the one-call fused kernel (kernels.streaming) wins the
+            # infer latency; CPU/XLA: reuse the serve step's shared forward
+            fused_infer = jax.default_backend() == "tpu"
+        self.fused_infer = bool(fused_infer)
+        if mask is None:
+            mask = masking.make_mask(
+                jax.random.PRNGKey(cfg.mask_seed), cfg.n_nodes, cfg.n_in, cfg.dtype
+            )
+        self.mask = mask
+
+        self.sched = SlotScheduler(self.max_streams)
+        self.slot_pos = np.zeros(self.max_streams, np.int64)  # samples consumed
+        single = init_state(cfg)
+        self._fresh_row = single
+        self.states: OnlineState = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(
+                leaf, (self.max_streams, *leaf.shape)
+            ).copy(),
+            single,
+        )
+        self._admitted_this_step: List[int] = []
+        self.global_step = 0
+        self.step_times_s: List[float] = []   # per-step wall time (latency)
+
+    # -- request lifecycle -------------------------------------------------------
+
+    def submit(self, req: StreamRequest) -> None:
+        if req.u.shape[1] != self.t_max:
+            raise ValueError(
+                f"stream {req.rid}: samples padded to T={req.u.shape[1]}, "
+                f"server expects t_max={self.t_max}"
+            )
+        req.submit_t = time.perf_counter()
+        self.sched.submit(req)
+
+    def _on_admit(self, i: int, req: StreamRequest) -> None:
+        """Mark slot row i for the in-program fresh-state reset."""
+        self.slot_pos[i] = 0
+        self._admitted_this_step.append(i)
+
+    def _snapshot_row(self, i: int) -> OnlineState:
+        """Copy of slot i's state (the retiring stream's final model)."""
+        return _snapshot_slot(self.states, jnp.asarray(i))
+
+    # -- the serving loop --------------------------------------------------------
+
+    def step(self) -> None:
+        """One global step: admit, batch one window per live slot, run the
+        jitted fixed-shape step, scatter predictions, retire finished."""
+        self._admitted_this_step.clear()
+        self.sched.admit(self._on_admit)
+        S, W, T = self.max_streams, self.window, self.t_max
+        u = np.zeros((S, W, T, self.cfg.n_in), np.float32)
+        length = np.ones((S, W), np.int32)    # dead samples: length 1, weight 0
+        label = np.zeros((S, W), np.int32)
+        weight = np.zeros((S, W), np.float32)
+        live = np.zeros((S,), bool)
+        fresh_mask = np.zeros((S,), bool)
+        fresh_mask[self._admitted_this_step] = True
+        for i, req in self.sched.live():
+            lo = int(self.slot_pos[i])
+            n = min(W, req.n_samples - lo)
+            u[i, :n] = req.u[lo:lo + n]
+            length[i, :n] = req.length[lo:lo + n]
+            label[i, :n] = req.label[lo:lo + n]
+            weight[i, :n] = 1.0
+            live[i] = True
+
+        t0 = time.perf_counter()
+        self.states, preds, _ = _stream_step(
+            self.cfg, self.mask, self.states, self._fresh_row,
+            jnp.asarray(fresh_mask),
+            jnp.asarray(u), jnp.asarray(length), jnp.asarray(label),
+            jnp.asarray(weight), jnp.asarray(live), self.lr,
+            self.phase_steps, fused_infer=self.fused_infer,
+        )
+        self.global_step += 1
+        if self.global_step % self.refresh_every == 0:
+            eligible = self._refresh_eligible(jnp.asarray(live))
+            self.states = _stream_refresh(self.states, self.beta, eligible)
+        preds_np = np.asarray(preds)   # blocks: the served predictions
+        self.step_times_s.append(time.perf_counter() - t0)
+
+        for i, req in self.sched.live():
+            lo = int(self.slot_pos[i])
+            n = min(W, req.n_samples - lo)
+            for k in range(n):
+                pred = int(preds_np[i, k])
+                req.preds.append(pred)
+                req.correct += int(pred == int(req.label[lo + k]))
+            self.slot_pos[i] += n
+            if self.slot_pos[i] >= req.n_samples:
+                req.final_state = self._snapshot_row(i)
+                req.done = True
+                req.finish_t = time.perf_counter()
+                self.sched.retire(i)   # continuous batching: slot refills
+
+    def _refresh_eligible(self, live: Array) -> Array:
+        """Live slots past the phase boundary with accumulated samples."""
+        return (
+            live
+            & (self.states.step >= self.phase_steps)
+            & (self.states.ridge.count > 0)
+        )
+
+    def run_until_drained(self, max_steps: int = 100000) -> List[StreamRequest]:
+        steps = 0
+        while self.sched.active() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.sched.completed
+
+    # -- diagnostics ---------------------------------------------------------------
+
+    @property
+    def completed(self) -> List[StreamRequest]:
+        return self.sched.completed
+
+    def latency_percentiles_ms(self) -> Dict[str, float]:
+        """p50/p99 of the per-step (one window per live slot) wall time."""
+        if not self.step_times_s:
+            return {"p50_ms": 0.0, "p99_ms": 0.0}
+        t = np.asarray(self.step_times_s) * 1e3
+        return {
+            "p50_ms": float(np.percentile(t, 50)),
+            "p99_ms": float(np.percentile(t, 99)),
+        }

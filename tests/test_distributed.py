@@ -124,3 +124,85 @@ def test_compressed_psum_single_shard_identity():
     err2 = float(jnp.max(jnp.abs(out2["w"] + res["w"] - g["w"])))
     assert err1 < 0.02 * float(jnp.max(jnp.abs(g["w"])))
     assert err2 <= err1 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Ensemble member axis (online serving): rule table + psum-exact online step
+# ---------------------------------------------------------------------------
+
+
+def test_member_axis_shards_ensemble_state():
+    """The 'member' logical axis shards the ensemble K axis over the data
+    axes, with the divisibility guard and per-array uniqueness intact."""
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 2}
+
+    rules = dict(shd.DEFAULT_RULES)
+    # K=16 divisible by pod*data=8 -> sharded; trailing dims replicated
+    spec = shd.guarded_spec((16, 10, 992), ("member", None, None),
+                            FakeMesh(), rules)
+    assert spec == P(("pod", "data"), None, None)
+    # K=4 indivisible by 8 -> replicated (guard, not an error)
+    spec = shd.guarded_spec((4,), ("member",), FakeMesh(), rules)
+    assert spec == P(None)
+
+
+def test_ensemble_logical_axes_cover_state():
+    """ensemble_logical_axes() mirrors the OnlineState tree leaf-for-leaf
+    and every leaf leads with 'member'."""
+    from repro.core.online import OnlineEnsemble, ensemble_logical_axes
+    from repro.core.types import DFRConfig
+
+    cfg = DFRConfig(n_in=2, n_classes=3, n_nodes=6)
+    state = OnlineEnsemble(cfg, 4).init()
+    axes = ensemble_logical_axes()
+    state_leaves, state_def = jax.tree_util.tree_flatten(state)
+    axes_leaves, axes_def = jax.tree_util.tree_flatten(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert state_def == axes_def
+    for leaf, ax in zip(state_leaves, axes_leaves):
+        assert ax[0] == "member"
+        assert len(ax) == leaf.ndim
+
+
+def test_online_step_psum_matches_unsharded():
+    """online_step(axis_names=('data',)) inside shard_map over a 1-device
+    data mesh reproduces the plain step exactly ((A, B)/grad sums are
+    associative, so the psum is the identity at world size 1)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.core import online
+    from repro.core.types import DFRConfig
+
+    cfg = DFRConfig(n_in=2, n_classes=2, n_nodes=6)
+    system = online.OnlineDFR(cfg)
+    state = system.init()
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(4, 10, 2)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(3, 11, 4), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, 2, 4), jnp.int32)
+    lr = jnp.float32(0.2)
+
+    ref_state, ref_metrics = system.step(state, u, ln, lab, lr, lr)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    P_ = PartitionSpec
+    sharded = shard_map(
+        lambda st, uu, ll, yy: online.online_step(
+            cfg, system.mask, st, uu, ll, yy, lr, lr, axis_names=("data",)
+        ),
+        mesh=mesh,
+        in_specs=(P_(), P_("data"), P_("data"), P_("data")),
+        out_specs=P_(),
+        check_rep=False,
+    )
+    got_state, got_metrics = jax.jit(sharded)(state, u, ln, lab)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_state),
+                    jax.tree_util.tree_leaves(got_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(ref_metrics["loss"]),
+                               float(got_metrics["loss"]), rtol=1e-6)

@@ -152,3 +152,25 @@ def test_dprr_kernel_single_sample_matches_manual():
     want = ref.dprr_ref(x, length, nx)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("b,t,nx,ny,chunk,f_name",
+                         [(3, 50, 30, 4, 64, "linear"),
+                          (2, 130, 17, 9, 128, "linear"),
+                          (4, 64, 8, 2, 64, "tanh")])
+def test_streaming_kernel_matches_unfused(b, t, nx, ny, chunk, f_name):
+    """Fused streaming step (reservoir -> DPRR -> readout in one kernel)
+    vs the unfused XLA composition, across lengths/padding/nonlinearity."""
+    f = {"linear": (lambda z: z), "tanh": jnp.tanh}[f_name]
+    rng = np.random.default_rng(b * t + nx)
+    j = jnp.asarray(rng.normal(size=(b, t, nx)).astype(np.float32))
+    lens = jnp.asarray(rng.integers(1, t + 1, b), jnp.int32)
+    p, q = jnp.float32(0.02), jnp.float32(0.3)
+    W = jnp.asarray(0.01 * rng.normal(size=(ny, nx * (nx + 1))).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(ny,)).astype(np.float32))
+    got = ops.streaming_logits(j, lens, p, q, W, bias, nx, f=f,
+                               chunk_t=chunk, backend="interpret")
+    want = ops.streaming_logits(j, lens, p, q, W, bias, nx, f=f,
+                                backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,200 @@
+"""Stream server: continuous batching retires/refills slots correctly,
+per-slot state isolation, and OnlineEnsemble(K=1) == OnlineDFR parity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import OnlineDFR, OnlineEnsemble, reset_statistics
+from repro.core.types import DFRConfig
+from repro.runtime import StreamRequest, StreamServer
+
+
+CFG = DFRConfig(n_in=2, n_classes=3, n_nodes=8)
+
+
+def _make_stream(rid, n, t=16, seed=0, n_in=2, n_classes=3):
+    r = np.random.default_rng(seed)
+    return StreamRequest(
+        rid=rid,
+        u=r.normal(size=(n, t, n_in)).astype(np.float32),
+        length=r.integers(4, t + 1, n).astype(np.int32),
+        label=r.integers(0, n_classes, n).astype(np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_retire_refill_serves_every_stream():
+    """More streams than slots, lengths that are not window multiples:
+    every stream completes with exactly one prediction per sample."""
+    srv = StreamServer(CFG, t_max=16, max_streams=2, window=4,
+                       phase_steps=2, refresh_every=3)
+    sizes = [10, 7, 5, 12, 3]
+    for i, n in enumerate(sizes):
+        srv.submit(_make_stream(i, n, seed=i))
+    done = srv.run_until_drained()
+    assert sorted(r.rid for r in done) == list(range(len(sizes)))
+    for r in done:
+        assert r.done
+        assert len(r.preds) == r.n_samples
+        assert r.final_state is not None
+        # retired snapshot is a single-system state (no slot axis)
+        assert r.final_state.ridge.B.shape == (CFG.s, CFG.s)
+
+
+def test_slot_reuse_resets_state():
+    """A stream admitted into a reused slot starts from the fresh state:
+    serving the same stream first or after another yields identical
+    predictions (the refilled slot inherits nothing)."""
+
+    def serve(streams, target_rid):
+        srv = StreamServer(CFG, t_max=16, max_streams=1, window=4,
+                           phase_steps=2, refresh_every=3)
+        for s in streams:
+            srv.submit(s)
+        srv.run_until_drained()
+        return next(r.preds for r in srv.completed if r.rid == target_rid)
+
+    first = serve([_make_stream(7, 9, seed=3)], 7)
+    second = serve([_make_stream(0, 8, seed=11), _make_stream(7, 9, seed=3)], 7)
+    assert first == second
+
+
+def test_rejects_mismatched_t_max():
+    srv = StreamServer(CFG, t_max=16, max_streams=1, window=2)
+    with pytest.raises(ValueError):
+        srv.submit(_make_stream(0, 4, t=12))
+
+
+# ---------------------------------------------------------------------------
+# Per-slot state isolation
+# ---------------------------------------------------------------------------
+
+
+def test_per_slot_state_isolation_exact():
+    """One stream's updates never leak into another slot: stream 0 served
+    alone produces bit-identical predictions to stream 0 served alongside
+    four co-tenant streams (including slot churn)."""
+
+    def serve(streams):
+        srv = StreamServer(CFG, t_max=16, max_streams=4, window=3,
+                           phase_steps=3, refresh_every=2)
+        for s in streams:
+            srv.submit(s)
+        srv.run_until_drained()
+        return {r.rid: list(r.preds) for r in srv.completed}
+
+    alone = serve([_make_stream(0, 11, seed=42)])
+    crowd = serve([_make_stream(0, 11, seed=42)]
+                  + [_make_stream(i, n, seed=20 + i)
+                     for i, n in [(1, 9), (2, 14), (3, 6), (4, 10)]])
+    assert alone[0] == crowd[0]
+
+
+# ---------------------------------------------------------------------------
+# OnlineEnsemble(K=1) == OnlineDFR parity oracle
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_k1_matches_online_dfr_exactly():
+    """K=1 ensemble is numerically identical to the single system across
+    steps, infer, reset_statistics, and (to solver tolerance) refresh."""
+    cfg = DFRConfig(n_in=2, n_classes=3, n_nodes=8)
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(4, 12, 2)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(4, 13, 4), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, 3, 4), jnp.int32)
+    lr = jnp.float32(0.2)
+
+    single = OnlineDFR(cfg)
+    ens = OnlineEnsemble(cfg, 1)
+    s1, se = single.init(), ens.init()
+
+    for i in range(6):
+        p1 = np.asarray(single.infer(s1, u, ln))
+        np.testing.assert_array_equal(p1, np.asarray(ens.infer(se, u, ln)))
+        np.testing.assert_array_equal(
+            p1, np.asarray(ens.infer_members(se, u, ln))[0])
+        s1, m1 = single.step(s1, u, ln, lab, lr, lr)
+        se, me = ens.step(se, u, ln, lab, lr, lr)
+        np.testing.assert_array_equal(np.asarray(m1["loss"]),
+                                      np.asarray(me["loss"])[0])
+        if i == 2:
+            s1 = single.reset_statistics(s1)
+            se = jax.vmap(reset_statistics)(se)
+        for a, b in zip(jax.tree_util.tree_leaves(s1),
+                        jax.tree_util.tree_leaves(se)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[0])
+
+    # refresh: batched Cholesky vs single Cholesky agree to solver precision
+    s1 = single.refresh_output(s1, jnp.float32(1e-2))
+    se = ens.refresh_output(se, jnp.float32(1e-2))
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(se.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b)[0],
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(single.infer(s1, u, ln)), np.asarray(ens.infer(se, u, ln)))
+
+
+def test_ensemble_cull_reseeds_losers():
+    """Culling keeps the best members verbatim (state included), re-seeds
+    losers near survivors with fresh statistics."""
+    cfg = DFRConfig(n_in=2, n_classes=2, n_nodes=6)
+    ens = OnlineEnsemble(cfg, 4, seed_jitter=0.2)
+    st = ens.init()
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.normal(size=(4, 10, 2)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(3, 11, 4), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, 2, 4), jnp.int32)
+    for _ in range(3):
+        st, _ = ens.step(st, u, ln, lab, jnp.float32(0.2), jnp.float32(0.2))
+    culled = ens.cull(st, jax.random.PRNGKey(0), survive_frac=0.5)
+
+    order = np.argsort(np.asarray(st.loss_ema))
+    # survivors: best two members, verbatim (params, stats, counters)
+    for slot, parent in enumerate(order[:2]):
+        for a, b in zip(jax.tree_util.tree_leaves(
+                            jax.tree_util.tree_map(lambda l: l[parent], st)),
+                        jax.tree_util.tree_leaves(
+                            jax.tree_util.tree_map(lambda l: l[slot], culled))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # culled slots: jittered (p, q) near their parent, zeroed statistics
+    assert float(jnp.sum(jnp.abs(culled.ridge.B[2:]))) == 0.0
+    assert int(jnp.sum(culled.ridge.count[2:])) == 0
+    p = np.asarray(culled.params.p)
+    assert p[2] != p[0] and p[3] != p[1]  # jitter moved the clones
+
+
+def test_online_step_weight_masks_dead_samples_exactly():
+    """The 0/1 sample weight (the stream server's tail-window mechanism) is
+    exact: a window padded with dead samples produces the same state as the
+    live samples alone (loss, grads, (A, B), count all unpolluted)."""
+    from repro.core import masking, online
+
+    cfg = DFRConfig(n_in=2, n_classes=3, n_nodes=8)
+    mask = masking.make_mask(jax.random.PRNGKey(cfg.mask_seed), cfg.n_nodes,
+                             cfg.n_in, cfg.dtype)
+    state = online.init_state(cfg)
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=(4, 12, 2)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(4, 13, 4), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, 3, 4), jnp.int32)
+    lr = jnp.float32(0.2)
+    w = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+
+    padded, m_pad = online.online_step(cfg, mask, state, u, ln, lab, lr, lr,
+                                       weight=w)
+    live, m_live = online.online_step(cfg, mask, state, u[:2], ln[:2],
+                                      lab[:2], lr, lr)
+    for a, b in zip(jax.tree_util.tree_leaves(padded),
+                    jax.tree_util.tree_leaves(live)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(m_pad["loss"]), float(m_live["loss"]),
+                               rtol=1e-6)
+    assert int(padded.ridge.count) == int(live.ridge.count) == 2
