@@ -45,6 +45,14 @@ def main():
     ap.add_argument("--max-streams", type=int, default=2,
                     help="server slots (< streams exercises refill)")
     ap.add_argument("--window", type=int, default=4)
+    ap.add_argument("--refresh-mode", choices=("recompute", "incremental"),
+                    default="recompute",
+                    help="periodic ridge refresh: re-factorize B (O(s^3)) "
+                         "or keep a live rank-1-updated Cholesky factor per "
+                         "slot (O(s^2) solves)")
+    ap.add_argument("--refresh-cohorts", type=int, default=1,
+                    help="stagger the refresh round over this many "
+                         "round-robin slot cohorts (1 = global round)")
     args = ap.parse_args()
 
     spec = PAPER_DATASETS[args.dataset]
@@ -72,12 +80,14 @@ def main():
     server = StreamServer(
         cfg, t_max=train.t_max, max_streams=args.max_streams,
         window=args.window, phase_steps=phase_steps, refresh_every=5,
+        refresh_mode=args.refresh_mode, refresh_cohorts=args.refresh_cohorts,
     )
     print(f"serving {len(streams)} streams x ~{len(splits[0])} samples "
           f"({args.max_streams} slots, windows of {args.window}); phase 1 "
           f"(reservoir adaptation) for {phase_steps} windows/stream, then "
-          f"phase 2 ((A,B) accumulation, batched ridge refresh every 5 "
-          f"rounds) - the paper's protocol, train-while-serve")
+          f"phase 2 ((A,B) accumulation, {args.refresh_mode} ridge refresh "
+          f"every 5 rounds over {server.cohorts.n_cohorts} cohort(s)) - "
+          f"the paper's protocol, train-while-serve")
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()

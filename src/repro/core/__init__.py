@@ -27,6 +27,16 @@ from repro.core.ridge import (  # noqa: F401
     ridge_cholesky_batched,
     accumulate_ab,
     regularize,
+    cholupdate_dense,
+    cholupdate_dense_batched,
+    cholupdate_dense_t,
+    cholupdate_window,
+    cholupdate_window_t,
+    ridge_solve_from_factor,
+    ridge_solve_from_factor_batched,
+    ridge_solve_from_factor_t,
+    ridge_solve_from_factor_t_batched,
+    seed_factor,
 )
 from repro.core.backprop import (  # noqa: F401
     forward,

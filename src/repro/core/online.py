@@ -74,17 +74,34 @@ class OnlineState:
 # ---------------------------------------------------------------------------
 
 
-def init_state(cfg: DFRConfig) -> OnlineState:
-    """Fresh single-system state: paper init (p, q), zero readout + stats."""
+def init_state(cfg: DFRConfig, factor_beta: Optional[float] = None) -> OnlineState:
+    """Fresh single-system state: paper init (p, q), zero readout + stats.
+
+    With ``factor_beta`` set, the state additionally carries a *live*
+    incremental Cholesky factor seeded for the empty system
+    (``ridge.seed_factor``: chol(0 + beta I) = sqrt(beta) I), enabling the
+    O(s^2) rank-1 maintenance path of ``online_serve_step`` and the
+    triangular-solve fast path of ``refresh_output`` - no O(s^3)
+    factorization ever runs for this stream.
+    """
+    rs = RidgeState.zeros(cfg.s, cfg.n_classes, cfg.dtype)
+    if factor_beta is not None:
+        rs = RidgeState(
+            A=rs.A, B=rs.B, count=rs.count,
+            Lt=ridge.seed_factor(cfg.s, factor_beta, cfg.dtype),
+            factor_beta=jnp.asarray(factor_beta, cfg.dtype),
+        )
     return OnlineState(
         params=DFRParams.init(cfg),
-        ridge=RidgeState.zeros(cfg.s, cfg.n_classes, cfg.dtype),
+        ridge=rs,
         step=jnp.zeros((), jnp.int32),
         loss_ema=jnp.zeros((), cfg.dtype),
     )
 
 
-def reset_statistics(state: OnlineState) -> OnlineState:
+def reset_statistics(
+    state: OnlineState, factor_beta: Optional[float] = None
+) -> OnlineState:
     """Zero the Ridge sufficient statistics, keeping (p, q, W, b) and the
     step counter.
 
@@ -93,10 +110,21 @@ def reset_statistics(state: OnlineState) -> OnlineState:
     accumulated under the *old* features are stale and must be restarted.
     Pure and shape-preserving, so it vmaps over member/slot axes and can be
     applied selectively with ``jax.tree_util.tree_map`` + ``jnp.where``.
+
+    The zeroed ``factor_beta`` also drops any live incremental factor (it
+    factored the stale B); pass ``factor_beta`` to re-seed a fresh live
+    factor for the restarted statistics, as ``init_state`` does.
     """
+    rs = jax.tree_util.tree_map(jnp.zeros_like, state.ridge)
+    if factor_beta is not None:
+        rs = RidgeState(
+            A=rs.A, B=rs.B, count=rs.count,
+            Lt=ridge.seed_factor(rs.B.shape[-1], factor_beta, rs.B.dtype),
+            factor_beta=jnp.asarray(factor_beta, rs.B.dtype),
+        )
     return OnlineState(
         params=state.params,
-        ridge=jax.tree_util.tree_map(jnp.zeros_like, state.ridge),
+        ridge=rs,
         step=state.step,
         loss_ema=state.loss_ema,
     )
@@ -193,6 +221,11 @@ def online_step(
             A=state.ridge.A + _psum(dA),
             B=state.ridge.B + _psum(dB),
             count=state.ridge.count + _psum(n_live).astype(state.ridge.count.dtype),
+            # B moved (and psums across shards) without rotating L: any live
+            # incremental factor is stale now - invalidate it.  Rank-1
+            # maintenance lives in online_serve_step, the per-sample path.
+            Lt=state.ridge.Lt,
+            factor_beta=jnp.zeros_like(state.ridge.factor_beta),
         ),
         step=state.step + 1,
         loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
@@ -218,6 +251,7 @@ def online_serve_step(
     lr: Array,       # scalar slot learning rate (0 in the frozen phase)
     weight: Array,   # (B,) 0/1 live-sample mask
     accumulate: Array,  # scalar 0/1: accumulate (A, B) this step?
+    maintain_factor: "bool | str" = False,  # False | True | 'defer'
 ) -> Tuple[OnlineState, Array, Dict[str, Array]]:
     """Fused infer-before-update + train step for the serving path.
 
@@ -235,6 +269,27 @@ def online_serve_step(
         post-update parameters.  (Accumulating during the adaptation phase
         would be discarded at the phase boundary anyway - see
         ``reset_statistics``.)
+
+    ``maintain_factor`` (static) compiles in the incremental Cholesky
+    engine: every r~ row folded into B is simultaneously rotated into the
+    live factor with an O(s^2) ``cholupdate`` (zero-gated rows are exact
+    no-ops), keeping  L L^T = B + factor_beta I  current so the next
+    refresh is two triangular solves instead of a factorization.  The
+    caller must have seeded a live factor (``init_state(factor_beta=...)``)
+    - the stream server's ``refresh_mode='incremental'`` invariant.  With
+    ``maintain_factor=False`` no factor math is compiled and any live
+    factor is invalidated once statistics move.
+
+    ``maintain_factor='defer'`` keeps the factor valid but does NOT rotate
+    it; the exact gated rows are returned as ``metrics['rt_rows']`` for the
+    caller to fold (``ridge.cholupdate_window_t``) *outside* its
+    select/cond plumbing.  This exists for the stream server: folding
+    inside its admission/liveness conds keeps the pre-sweep factor alive
+    across the rotation loop, which forces XLA to copy the (S, s, s)
+    buffer every iteration instead of updating in place - deferring the
+    fold past the conds restores the in-place loop (~2.5x per-step at
+    S=32, Nx=16).  Numerically identical to the inline fold: dead/tail
+    rows are zero-gated no-ops either way.
 
     Returns (new state, logits (B, Ny), metrics).
     """
@@ -257,6 +312,25 @@ def online_serve_step(
     dA, dB = ridge.accumulate_ab(
         jnp.zeros_like(state.ridge.A), jnp.zeros_like(state.ridge.B), rt, onehot
     )
+    if maintain_factor == "defer":
+        # caller folds rt into the factor itself (see docstring)
+        Lt = state.ridge.Lt
+        factor_beta = state.ridge.factor_beta
+    elif maintain_factor:
+        # fold the same gated rows into the live factor: one O(s^2) rotation
+        # sweep per streamed sample (zero rows are exact no-ops, so dead
+        # samples and adaptation-phase windows leave the factor untouched -
+        # in lockstep with the gated B accumulation above)
+        Lt = ridge.cholupdate_window_t(state.ridge.Lt, rt)
+        factor_beta = state.ridge.factor_beta
+    else:
+        Lt = state.ridge.Lt
+        # statistics move without rotating the factor: drop any live factor
+        factor_beta = jnp.where(
+            acc * jnp.sum(w) > 0,
+            jnp.zeros_like(state.ridge.factor_beta),
+            state.ridge.factor_beta,
+        )
     new = OnlineState(
         params=params,
         ridge=RidgeState(
@@ -264,22 +338,43 @@ def online_serve_step(
             B=state.ridge.B + dB,
             count=state.ridge.count
             + (acc * jnp.sum(w)).astype(state.ridge.count.dtype),
+            Lt=Lt,
+            factor_beta=factor_beta,
         ),
         step=state.step + 1,
         loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
     )
     hits = (jnp.argmax(aux.logits, -1) == label).astype(jnp.float32) * w
     metrics = {"loss": loss * inv, "acc": jnp.sum(hits) * inv}
+    if maintain_factor == "defer":
+        metrics["rt_rows"] = rt
     return new, aux.logits, metrics
 
 
 def refresh_output(
     state: OnlineState, beta: Array, method: str = "cholesky_blocked"
 ) -> OnlineState:
-    """Ridge re-solve of the output layer from the streamed (A, B)."""
-    Wt = ridge.ridge_solve(
-        state.ridge.A, ridge.regularize(state.ridge.B, beta), method
-    )
+    """Ridge re-solve of the output layer from the streamed (A, B).
+
+    Fast path: when the state carries a live incremental factor for this
+    exact ``beta`` (``RidgeState.factor_beta``), the solve is two
+    triangular substitutions against L - O(s^2 Ny), no factorization
+    (``lax.cond`` executes only the taken branch).  Otherwise the full
+    O(s^3) pipeline of ``ridge.ridge_solve`` runs, so a mismatched beta
+    (e.g. a regularization sweep over frozen statistics) stays correct.
+    """
+    beta = jnp.asarray(beta, state.ridge.B.dtype)
+
+    def _from_factor(_):
+        return ridge.ridge_solve_from_factor_t(state.ridge.A, state.ridge.Lt)
+
+    def _full(_):
+        return ridge.ridge_solve(
+            state.ridge.A, ridge.regularize(state.ridge.B, beta), method
+        )
+
+    live = (state.ridge.factor_beta > 0) & (state.ridge.factor_beta == beta)
+    Wt = jax.lax.cond(live, _from_factor, _full, None)
     params = DFRParams(
         p=state.params.p, q=state.params.q, W=Wt[:, :-1], b=Wt[:, -1]
     )
@@ -316,6 +411,7 @@ def ensemble_logical_axes() -> OnlineState:
         ridge=RidgeState(
             A=("member", None, None), B=("member", None, None),
             count=("member",),
+            Lt=("member", None, None), factor_beta=("member",),
         ),
         step=("member",),
         loss_ema=("member",),

@@ -90,7 +90,10 @@ class DistributedDFRReadout:
         rt = dprr.r_tilde(r)
         onehot = jax.nn.one_hot(label, self.cfg.n_classes, dtype=self.cfg.dtype)
         A, B = ridge.accumulate_ab(ridge_state.A, ridge_state.B, rt, onehot)
-        return RidgeState(A=A, B=B, count=ridge_state.count + h.shape[0])
+        # B moved without rotating L: invalidate any live factor
+        return RidgeState(A=A, B=B, count=ridge_state.count + h.shape[0],
+                          Lt=ridge_state.Lt,
+                          factor_beta=jnp.zeros_like(ridge_state.factor_beta))
 
     def solve(
         self, ridge_state: RidgeState, params: DFRParams, beta: Array,

@@ -20,6 +20,33 @@ Four implementations, from paper-faithful to TPU-production:
    ``repro.kernels`` implement the per-tile work, this module carries the
    pure-jnp blocked reference.
 
+Incremental rank-1 engine (``cholupdate_*``): the streaming extension of the
+paper's in-place 1-D Cholesky.  Each streamed sample adds one outer product
+``r r^T`` to B, so instead of re-factorizing ``B + beta I`` from scratch at
+every refresh (O(s^3)), a *live factor* ``L`` is carried next to the (A, B)
+statistics and rotated forward per sample with an O(s^2) ``cholupdate``
+(hyperbolic variant for the downdate / forgetting path).  A refresh with a
+live factor is then just the two triangular substitutions (Algorithms 3/4),
+O(s^2 Ny).
+
+When is which path used?
+
+  * **Incremental** (live factor): the continuous-batching stream server in
+    ``refresh_mode='incremental'`` - samples arrive rank-1 (small windows),
+    the factor is seeded at slot admission as ``sqrt(beta) I`` (B = 0) and
+    every accumulated sample rotates it, so no O(s^3) factorization ever
+    runs for that slot.  ``repro.core.online.refresh_output`` takes this
+    fast path automatically whenever ``RidgeState.factor_beta`` matches the
+    requested beta.
+  * **Full factorization**: no live factor (offline ridge, the population
+    engine, ensemble refresh), a beta different from the seeded one
+    (regularization sweeps), or mass accumulation - when many samples land
+    between refreshes (large windows / batch admission) the sequential
+    rank-1 rotations cost ``n_new * O(s^2)`` with poor arithmetic intensity
+    and one blocked/LAPACK O(s^3) factorization wins again; the benchmark's
+    honest columns (``bench_stream`` refresh-mode table) quantify the
+    crossover.
+
 Memory-word and arithmetic-op count formulas of Tables 2/3 are provided for
 the benchmark harness.
 """
@@ -404,6 +431,302 @@ def ridge_solve_batched(A: Array, B: Array, method: str = "cholesky_blocked") ->
     if method == "gaussian":
         return jax.vmap(ridge_gaussian)(A, B)
     raise ValueError(f"unknown batched ridge method: {method}")
+
+
+# ---------------------------------------------------------------------------
+# 5. Incremental rank-1 Cholesky: cholupdate / choldowndate.
+#
+# Streamed samples perturb B by rank-1 outer products, so the live factor L
+# of B + beta I is rotated forward in O(s^2) instead of re-factorized in
+# O(s^3): with A = L L^T,
+#
+#     A + sign * x x^T = L' L'^T
+#
+# via the LINPACK rotation sweep (sign=+1: Givens-style update; sign=-1:
+# hyperbolic downdate, the forgetting-factor / retired-sample path).  Three
+# forms, mirroring the factorization section above:
+#
+#   * ``cholupdate_packed_numpy`` - the paper-shaped oracle: in-place sweep
+#     over the same packed 1-D array P[s(s+1)/2] Algorithm 2 factors into
+#     (column k of C is the strided packed read the FPGA BRAM pays too).
+#   * ``cholupdate_packed_jax``   - the same sweep jitted over the packed
+#     array (fori_loop; masked strided column gather/scatter).
+#   * ``cholupdate_dense``        - the production form on a dense lower
+#     (s, s) factor: the packed addressing defeats the VPU exactly as it
+#     defeats the MXU for the factorization (see repro.kernels.cholesky),
+#     so the in-state factor is dense-lower and the sweep updates whole
+#     columns; ``cholupdate_dense_batched`` vmaps it over a member/slot
+#     axis, ``cholupdate_window`` folds a window of samples sequentially.
+#     The Pallas tile kernel in ``repro.kernels.cholupdate`` runs the same
+#     sweep with the factor resident in VMEM.
+#
+# The downdate requires  x^T (L L^T)^{-1} x < 1  (the result must stay SPD);
+# like the factorizations above, the sweep assumes a positive diagonal and
+# does not guard degenerate input.
+# ---------------------------------------------------------------------------
+
+
+def pad_factor_identity(F: Array, pad: int) -> Array:
+    """Zero-pad a (..., s, s) triangular factor by ``pad`` rows/cols with
+    ones on the padded diagonal: padded rotations and substitutions become
+    exact no-ops instead of zero-pivot divisions.  Shared by the Pallas
+    window wrapper (``kernels.ops.cholupdate_window``) and the blocked
+    batched substitution below - the invariant lives in one place.
+    """
+    if not pad:
+        return F
+    s = F.shape[-1]
+    eye_tail = jnp.diag(
+        jnp.pad(jnp.zeros((s,), F.dtype), (0, pad), constant_values=1.0)
+    )
+    widths = ((0, 0),) * (F.ndim - 2) + ((0, pad), (0, pad))
+    return jnp.pad(F, widths) + eye_tail.reshape(
+        (1,) * (F.ndim - 2) + eye_tail.shape
+    )
+
+
+def seed_factor(s: int, beta, dtype=jnp.float32) -> Array:
+    """Factor of the empty system: chol(0 + beta I) = sqrt(beta) I.
+
+    Seeding a fresh slot with this makes every later ``cholupdate`` exact:
+    no O(s^3) factorization is ever needed on the incremental path.
+    """
+    return jnp.sqrt(jnp.asarray(beta, dtype)) * jnp.eye(s, dtype=dtype)
+
+
+def cholupdate_packed_numpy(P: np.ndarray, x: np.ndarray, s: int,
+                            sign: float = 1.0) -> np.ndarray:
+    """Rank-1 update of the packed factor, loops and all (the oracle).
+
+    P holds C with C C^T = B (Algorithm 2's output); returns the packed
+    factor of B + sign * x x^T.  In-place update order: one rotation per
+    column k, touching only packed column k and the tail of x - the same
+    storage discipline as Algorithms 2-4.
+    """
+    P = np.array(P, copy=True)
+    x = np.array(x, copy=True).astype(P.dtype)
+    for k in range(s):
+        dk = P[k * (k + 1) // 2 + k]
+        r = np.sqrt(dk * dk + sign * x[k] * x[k])
+        c = r / dk
+        sk = x[k] / dk
+        P[k * (k + 1) // 2 + k] = r
+        for j in range(k + 1, s):
+            pj = (P[j * (j + 1) // 2 + k] + sign * sk * x[j]) / c
+            P[j * (j + 1) // 2 + k] = pj
+            x[j] = c * x[j] - sk * pj
+    return P
+
+
+@partial(jax.jit, static_argnames=("s",))
+def cholupdate_packed_jax(P: Array, x: Array, s: int, sign=1.0) -> Array:
+    """``cholupdate_packed_numpy`` jitted: the same sweep over the same
+    packed 1-D array.  Column k of C is a strided packed read (as in
+    Algorithm 4's inner loop), masked to rows >= k."""
+    ar = jnp.arange(s)
+    col_starts = ar * (ar + 1) // 2  # start of each packed row
+
+    def rot_k(k, carry):
+        P, x = carry
+        colk = P[col_starts + k]  # C[:, k], valid where ar >= k
+        dk = colk[k]
+        xk = x[k]
+        r = jnp.sqrt(dk * dk + sign * xk * xk)
+        c = r / dk
+        sk = xk / dk
+        new = (colk + sign * sk * x) / c
+        new = jnp.where(ar > k, new, colk).at[k].set(r)
+        x = jnp.where(ar > k, c * x - sk * new, x)
+        P = P.at[col_starts + k].set(jnp.where(ar >= k, new, colk))
+        return P, x
+
+    P, _ = jax.lax.fori_loop(0, s, rot_k, (P, x))
+    return P
+
+
+def _cholupdate_dense(L: Array, x: Array, sign) -> Array:
+    """One rotation sweep over a dense lower factor (vectorized columns)."""
+    n = L.shape[0]
+    ridx = jnp.arange(n)
+
+    def rot_k(k, carry):
+        L, x = carry
+        dk = L[k, k]
+        xk = x[k]
+        r = jnp.sqrt(dk * dk + sign * xk * xk)
+        c = r / dk
+        sk = xk / dk
+        col = (L[:, k] + sign * sk * x) / c
+        col = jnp.where(ridx > k, col, L[:, k]).at[k].set(r)
+        L = L.at[:, k].set(col)
+        x = jnp.where(ridx > k, c * x - sk * col, x)
+        return L, x
+
+    L, _ = jax.lax.fori_loop(0, n, rot_k, (L, x))
+    return L
+
+
+@jax.jit
+def cholupdate_dense(L: Array, x: Array, sign=1.0) -> Array:
+    """Rank-1 update/downdate of a dense lower factor: L (s, s), x (s,)."""
+    return _cholupdate_dense(L, x, jnp.asarray(sign, L.dtype))
+
+
+@jax.jit
+def cholupdate_dense_batched(L: Array, x: Array, sign=1.0) -> Array:
+    """Member/slot-axis rank-1 update: L (K, s, s), x (K, s)."""
+    sg = jnp.asarray(sign, L.dtype)
+    return jax.vmap(lambda l, v: _cholupdate_dense(l, v, sg))(L, x)
+
+
+def cholupdate_window(L: Array, X: Array, sign=1.0) -> Array:
+    """Fold a window of samples into the factor: X (W, s), rows applied in
+    stream order.  A zero row is an exact no-op (r = |d|, c = 1, sk = 0), so
+    callers gate dead/tail samples by scaling rows to zero - the same 0/1
+    weight discipline as ``repro.core.online.online_step``."""
+    sg = jnp.asarray(sign, L.dtype)
+
+    def fold(t, L):
+        return _cholupdate_dense(L, X[t], sg)
+
+    return jax.lax.fori_loop(0, X.shape[0], fold, L)
+
+
+def _cholupdate_dense_t(U: Array, x: Array, sign) -> Array:
+    """The rotation sweep on the *transposed* factor U = L^T.
+
+    Column k of L is row k of U - a contiguous read/write in row-major
+    storage.  The strided column access of the untransposed sweep wastes a
+    full cache line per element on CPU (and lane shuffles on TPU), which is
+    why the in-state factor (``RidgeState.Lt``) is stored transposed: the
+    vmapped per-slot sweep runs ~2x faster than the column form at the
+    server's (S, s, s) shapes.  Bit-identical to
+    ``cholupdate_dense(U.T, x).T``.
+    """
+    n = U.shape[0]
+    cidx = jnp.arange(n)
+
+    def rot_k(k, carry):
+        U, x = carry
+        rowk = U[k]
+        dk = rowk[k]
+        xk = x[k]
+        r = jnp.sqrt(dk * dk + sign * xk * xk)
+        c = r / dk
+        sk = xk / dk
+        new = (rowk + sign * sk * x) / c
+        new = jnp.where(cidx > k, new, rowk).at[k].set(r)
+        U = U.at[k].set(new)
+        x = jnp.where(cidx > k, c * x - sk * new, x)
+        return U, x
+
+    U, _ = jax.lax.fori_loop(0, n, rot_k, (U, x))
+    return U
+
+
+@jax.jit
+def cholupdate_dense_t(U: Array, x: Array, sign=1.0) -> Array:
+    """Rank-1 update/downdate of a transposed factor: U = L^T (s, s)."""
+    return _cholupdate_dense_t(U, x, jnp.asarray(sign, U.dtype))
+
+
+def cholupdate_window_t(U: Array, X: Array, sign=1.0) -> Array:
+    """``cholupdate_window`` on the transposed in-state factor."""
+    sg = jnp.asarray(sign, U.dtype)
+
+    def fold(t, U):
+        return _cholupdate_dense_t(U, X[t], sg)
+
+    return jax.lax.fori_loop(0, X.shape[0], fold, U)
+
+
+@jax.jit
+def ridge_solve_from_factor(A: Array, L: Array) -> Array:
+    """Refresh from a live factor: W~ = A (L L^T)^{-1}, two triangular
+    substitutions (Algorithms 3/4), O(s^2 Ny) - no factorization."""
+    D = jax.scipy.linalg.solve_triangular(L, A.T, lower=True).T
+    return jax.scipy.linalg.solve_triangular(L.T, D.T, lower=False).T
+
+
+@jax.jit
+def ridge_solve_from_factor_t(A: Array, U: Array) -> Array:
+    """``ridge_solve_from_factor`` on the transposed factor U = L^T:
+    U^T Y = A^T forward, then U W~^T = Y backward (LAPACK handles the
+    transpose by flag, no copy)."""
+    Y = jax.scipy.linalg.solve_triangular(U, A.T, lower=False, trans="T")
+    return jax.scipy.linalg.solve_triangular(U, Y, lower=False).T
+
+
+@jax.jit
+def ridge_solve_from_factor_batched(A: Array, L: Array) -> Array:
+    """Batched refresh from live factors: A (K, Ny, s), L (K, s, s)."""
+    X = jax.scipy.linalg.cho_solve((L, True), jnp.swapaxes(A, -1, -2))
+    return jnp.swapaxes(X, -1, -2)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def ridge_solve_from_factor_t_batched(
+    A: Array, U: Array, block: int = 16
+) -> Array:
+    """Batched refresh from transposed live factors by *blocked
+    substitution*:  A (K, Ny, s), U (K, s, s) with U = L^T.
+
+    XLA:CPU lowers the batched triangular-solve primitive poorly (worse
+    than the batched factorization it should undercut - the same lowering
+    gap PR 1 found for vmapped TRSMs), so the two substitutions run as
+    explicit row-block sweeps: per block, an unrolled in-block solve plus
+    one batched GEMM for the trailing update.  O(s^2 Ny) per member, ~4x
+    faster than ``cho_solve`` at the stream server's (S, s, s) shapes.
+
+    The system pads to a block multiple with an identity diagonal (padded
+    rows solve to zero exactly, as in ``repro.kernels.ridge_solve``).
+    """
+    k, ny, s = A.shape
+    pad = (-s) % block
+    if pad:
+        U = pad_factor_identity(U, pad)
+        A = jnp.pad(A, ((0, 0), (0, 0), (0, pad)))
+    n = s + pad
+    nb = n // block
+    ridx = jnp.arange(n)
+
+    # forward:  U^T Y = A^T  (U^T is lower; row block j of U^T is the
+    # column block j of U, read as rows of U - contiguous)
+    Y = jnp.swapaxes(A, -1, -2)  # (K, n, Ny)
+
+    def fwd(j, Y):
+        j0 = j * block
+        cols = jax.lax.dynamic_slice(U, (0, 0, j0), (k, n, block))
+        done = jnp.where(ridx[None, :, None] < j0, Y, 0.0)
+        rhs = jax.lax.dynamic_slice(Y, (0, j0, 0), (k, block, ny))
+        rhs = rhs - jnp.einsum("ksb,ksn->kbn", cols, done)
+        Tb = jax.lax.dynamic_slice(cols, (0, j0, 0), (k, block, block))
+        sol = jnp.zeros_like(rhs)
+        for i in range(block):  # unrolled in-block forward substitution
+            v = (rhs[:, i, :] - jnp.einsum("kb,kbn->kn", Tb[:, :, i], sol))
+            sol = sol.at[:, i, :].set(v / Tb[:, i, i][:, None])
+        return jax.lax.dynamic_update_slice(Y, sol, (0, j0, 0))
+
+    Y = jax.lax.fori_loop(0, nb, fwd, Y)
+
+    # backward:  U W~^T = Y  (U upper; high row blocks first)
+    Wt = Y
+
+    def bwd(t, Wt):
+        j0 = (nb - 1 - t) * block
+        rows = jax.lax.dynamic_slice(U, (0, j0, 0), (k, block, n))
+        solved = jnp.where(ridx[None, :, None] >= j0 + block, Wt, 0.0)
+        rhs = jax.lax.dynamic_slice(Y, (0, j0, 0), (k, block, ny))
+        rhs = rhs - jnp.einsum("kbs,ksn->kbn", rows, solved)
+        Tb = jax.lax.dynamic_slice(rows, (0, 0, j0), (k, block, block))
+        sol = jnp.zeros_like(rhs)
+        for i in range(block - 1, -1, -1):  # unrolled backward substitution
+            v = (rhs[:, i, :] - jnp.einsum("kb,kbn->kn", Tb[:, i, :], sol))
+            sol = sol.at[:, i, :].set(v / Tb[:, i, i][:, None])
+        return jax.lax.dynamic_update_slice(Wt, sol, (0, j0, 0))
+
+    Wt = jax.lax.fori_loop(0, nb, bwd, Wt)
+    return jnp.swapaxes(Wt, -1, -2)[:, :, :s]
 
 
 # ---------------------------------------------------------------------------

@@ -126,14 +126,31 @@ class RidgeState:
     Both are sums over samples, hence associative: they accumulate online
     one sample at a time (the paper's edge system) and reduce across data
     shards with a single psum (this framework's at-scale extension).
+
+    ``Lt``/``factor_beta`` carry the *incremental* Cholesky engine
+    (``repro.core.ridge.cholupdate_*``): when ``factor_beta > 0``, ``Lt``
+    is the live factor, stored *transposed* (upper-triangular U = L^T with
+    L L^T = B + factor_beta * I), kept current by O(s^2) rank-1 rotations
+    as samples stream in, so a Ridge refresh is just two triangular
+    substitutions instead of an O(s^3) factorization.  Transposed because
+    the rotation sweep touches one factor column per step, and column k of
+    L is row k of U - contiguous in row-major storage, where the strided
+    column walk wastes a cache line per element (see
+    ``ridge.cholupdate_dense_t``).  ``factor_beta <= 0`` (the ``zeros``
+    default) means no live factor - refreshes re-factorize from B.  The
+    factor is *not* an associative sum, so it never psums across shards:
+    paths that accumulate (A, B) without rotating it (``online_step``)
+    invalidate it.
     """
 
     A: Array
     B: Array
     count: Array  # number of accumulated samples (scalar)
+    Lt: Array           # (s, s) transposed live factor (garbage unless live)
+    factor_beta: Array  # scalar; > 0 marks Lt live for that regularization
 
     def tree_flatten(self):
-        return (self.A, self.B, self.count), None
+        return (self.A, self.B, self.count, self.Lt, self.factor_beta), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -146,6 +163,8 @@ class RidgeState:
             A=jnp.zeros((n_classes, s), dtype),
             B=jnp.zeros((s, s), dtype),
             count=jnp.zeros((), jnp.int32),
+            Lt=jnp.zeros((s, s), dtype),
+            factor_beta=jnp.zeros((), dtype),
         )
 
 

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: rank-1 Cholesky update/downdate of a resident factor.
+
+The streaming extension of the blocked factorization kernels in
+``repro.kernels.cholesky``: instead of re-factorizing ``B + beta I`` after
+every window of streamed samples, the live lower factor L stays resident in
+VMEM and each sample's r~ row is rotated into it with the LINPACK sweep
+
+    L L^T + sign * x x^T = L' L'^T        (sign=-1: hyperbolic downdate)
+
+one column rotation per step, whole columns vectorized on the VPU - the
+same adaptation argument as the factorization kernels: the paper's packed
+1-D addressing suits FPGA BRAM but defeats the vector unit, so the packed
+*oracle* lives in ``repro.core.ridge`` (``cholupdate_packed_numpy`` /
+``cholupdate_packed_jax``) and the tile kernel carries the identical
+update order on a dense (bs, bs) tile.
+
+Kernels:
+
+  * ``cholupdate_block``         - fold a (W, bs) window of sample rows into
+                                   one (bs, bs) factor tile, rows in stream
+                                   order (W = 1 is the plain rank-1 form).
+                                   The factor is read once, rotated W times
+                                   in VMEM, written once - the fusion the
+                                   per-sample XLA path cannot express.
+  * ``cholupdate_block_batched`` - one grid step per member/slot: the stream
+                                   server's S live slots rotate their
+                                   factors in a single kernel launch.
+
+Zero rows are exact no-ops (r = d, c = 1, s = 0), so callers gate dead/tail
+samples by zero-scaling rows - the serving runtime's 0/1 weight discipline.
+Wrappers with padding contracts and backend dispatch: ``repro.kernels.ops.
+cholupdate_window``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cholupd_tile(L: jax.Array, X: jax.Array, sign: float) -> jax.Array:
+    """Rotate the (W, bs) rows of X into the (bs, bs) lower factor L."""
+    n = L.shape[0]
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    rowpos = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def rot_k(k, carry):
+        L, x = carry
+        dk = L[k, k]
+        xk = x[k]
+        r = jnp.sqrt(dk * dk + sign * xk * xk)
+        c = r / dk
+        sk = xk / dk
+        col = (L[:, k] + sign * sk * x) / c
+        col = jnp.where(rowpos > k, col, L[:, k]).at[k].set(r)
+        L = jnp.where(cidx == k, col[:, None], L)
+        x = jnp.where(rowpos > k, c * x - sk * col, x)
+        return L, x
+
+    def fold_row(t, L):
+        L, _ = jax.lax.fori_loop(0, n, rot_k, (L, X[t]))
+        return L
+
+    return jax.lax.fori_loop(0, X.shape[0], fold_row, L)
+
+
+def _cholupd_kernel(l_ref, x_ref, o_ref, *, sign: float):
+    o_ref[...] = _cholupd_tile(l_ref[...], x_ref[...], sign)
+
+
+def _cholupd_batched_kernel(l_ref, x_ref, o_ref, *, sign: float):
+    # refs carry one member/slot per grid step: (1, bs, bs) / (1, W, bs)
+    o_ref[0] = _cholupd_tile(l_ref[0], x_ref[0], sign)
+
+
+def cholupdate_block(L: jax.Array, X: jax.Array, *, sign: float = 1.0,
+                     interpret: bool = False) -> jax.Array:
+    """Fold X (W, bs) into the factor tile L (bs, bs), resident in VMEM."""
+    bs = L.shape[0]
+    w = X.shape[0]
+    return pl.pallas_call(
+        functools.partial(_cholupd_kernel, sign=sign),
+        out_shape=jax.ShapeDtypeStruct((bs, bs), L.dtype),
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda: (0, 0)),
+            pl.BlockSpec((w, bs), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda: (0, 0)),
+        interpret=interpret,
+    )(L, X)
+
+
+def cholupdate_block_batched(L: jax.Array, X: jax.Array, *, sign: float = 1.0,
+                             interpret: bool = False) -> jax.Array:
+    """Slot/member-axis window fold: L (K, bs, bs), X (K, W, bs).
+
+    One grid step per member; each keeps its own factor tile resident while
+    rotating its window through - the S live slots of the stream server
+    update in one launch, no host round trips.
+    """
+    k, bs, _ = L.shape
+    w = X.shape[1]
+    return pl.pallas_call(
+        functools.partial(_cholupd_batched_kernel, sign=sign),
+        grid=(k,),
+        out_shape=jax.ShapeDtypeStruct((k, bs, bs), L.dtype),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, bs), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bs), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(L, X)

@@ -244,3 +244,45 @@ def cholesky(
     if backend == "xla":
         return kref.chol_ref(B)
     return cholesky_blocked(B, block=block, interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("sign", "backend"))
+def cholupdate_window(
+    L: jax.Array,          # (s, s) or (K, s, s) live lower factor(s)
+    X: jax.Array,          # (W, s) or (K, W, s) sample rows, stream order
+    *,
+    sign: float = 1.0,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Rank-1 rotate a window of sample rows into live Cholesky factor(s).
+
+    Padding contract: s pads to the 128-lane tile with an identity diagonal
+    on the factor and zero sample columns - zero rotations are exact no-ops,
+    so the logical block is bit-equivalent to the unpadded sweep.
+    """
+    backend = _auto_backend(backend)
+    batched = L.ndim == 3
+    if backend == "xla":
+        from repro.core import ridge as core_ridge
+
+        if batched:
+            return jax.vmap(
+                lambda l, x: core_ridge.cholupdate_window(l, x, sign)
+            )(L, X)
+        return core_ridge.cholupdate_window(L, X, sign)
+
+    from repro.core.ridge import pad_factor_identity
+    from repro.kernels.cholupdate import cholupdate_block, cholupdate_block_batched
+
+    s = L.shape[-1]
+    n_pad = max(128, -(-s // 128) * 128)
+    pad = n_pad - s
+    if pad:
+        L = pad_factor_identity(L, pad)
+        X = _pad_to(X, X.ndim - 1, n_pad)
+    interp = backend == "interpret"
+    if batched:
+        out = cholupdate_block_batched(L, X, sign=sign, interpret=interp)
+        return out[:, :s, :s]
+    out = cholupdate_block(L, X, sign=sign, interpret=interp)
+    return out[:s, :s]

@@ -20,6 +20,53 @@ from collections import deque
 from typing import Any, Callable, Deque, List, Optional, Tuple
 
 
+class RefreshCohorts:
+    """Round-robin staggering of periodic per-slot maintenance rounds.
+
+    The stream server's Ridge refresh is the textbook latency-tail problem:
+    with a single global round every ``refresh_every`` steps, one step in
+    ``refresh_every`` pays the whole O(S * s^3) (or O(S * s^2), incremental)
+    refresh bill and the p99 window latency is that spike.  Staggering keeps
+    the *per-slot* cadence identical - every slot is still refreshed exactly
+    once per ``refresh_every`` server steps - but spreads the slots over the
+    period: slot i belongs to cohort ``i % n_cohorts``, and cohort c comes
+    due on steps where ``step % refresh_every`` hits c's offset, the offsets
+    spread evenly over the period.  Each step then refreshes at most
+    ``ceil(n_slots / n_cohorts)`` slots.
+
+    ``n_cohorts=1`` is exactly the global round (every slot due when
+    ``step % refresh_every == 0``) - the regression-tested identity.
+    ``n_cohorts`` is clamped to ``refresh_every`` (more cohorts than phases
+    cannot be scheduled without changing the per-slot cadence).
+    """
+
+    def __init__(self, n_slots: int, refresh_every: int, n_cohorts: int = 1):
+        self.n_slots = int(n_slots)
+        self.refresh_every = int(refresh_every)
+        self.n_cohorts = max(1, min(int(n_cohorts), self.refresh_every))
+        # evenly spread, strictly increasing phases (distinct by clamping)
+        self.offsets = [
+            (c * self.refresh_every) // self.n_cohorts
+            for c in range(self.n_cohorts)
+        ]
+        self.cohort_of_slot = [i % self.n_cohorts for i in range(self.n_slots)]
+
+    def due_cohort(self, step: int) -> Optional[int]:
+        """Cohort index due at this server step, or None."""
+        phase = step % self.refresh_every
+        try:
+            return self.offsets.index(phase)
+        except ValueError:
+            return None
+
+    def due_slots(self, step: int) -> Optional[List[int]]:
+        """Slot indices due at this server step, or None between rounds."""
+        c = self.due_cohort(step)
+        if c is None:
+            return None
+        return [i for i in range(self.n_slots) if self.cohort_of_slot[i] == c]
+
+
 class SlotScheduler:
     """Fixed-capacity slot pool with FIFO admission (continuous batching)."""
 

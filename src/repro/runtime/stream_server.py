@@ -18,8 +18,26 @@ Mapping to paper Sec. 3.1, per slot:
                    -> at the phase boundary: reset_statistics (features
                       moved under SGD, so the stats restart - Sec. 3.6's
                       requirement that Ridge sees consistent features)
-                   -> every refresh_every server steps: batched Cholesky
-                      re-solve of every live slot's output layer (Eq. 39-41)
+                   -> every refresh_every server steps: Ridge re-solve of
+                      the slot's output layer (Eq. 39-41).  Three refresh
+                      policies compose from two orthogonal knobs:
+
+                      * ``refresh_mode='recompute'`` - batched (s, s)
+                        Cholesky re-factorization from the accumulated B
+                        (the PR-2 path; O(s^3) per slot per round).
+                      * ``refresh_mode='incremental'`` - the slot carries a
+                        live factor of B + beta I (seeded sqrt(beta) I at
+                        admission, rotated forward by O(s^2) rank-1
+                        cholupdates inside the SAME fused step as samples
+                        accumulate - ``repro.core.ridge`` incremental
+                        engine), so the refresh is just two batched
+                        triangular solves, never a factorization.
+                      * ``refresh_cohorts=C`` - stagger the refresh round
+                        over C round-robin slot cohorts
+                        (``scheduler.RefreshCohorts``): identical per-slot
+                        cadence, but each step refreshes at most ceil(S/C)
+                        slots, flattening the p99 latency spike.  C=1 is
+                        bit-for-bit the global round.
 
 The scaling idea is the same one the token server uses for LM decode
 (``repro.runtime.server``), with the shared slot scheduler
@@ -42,7 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import masking
+from repro.core import masking, ridge
 from repro.core.online import (
     OnlineState,
     init_state,
@@ -51,7 +69,7 @@ from repro.core.online import (
 )
 from repro.core.types import Array, DFRConfig
 from repro.kernels import ops
-from repro.runtime.scheduler import SlotScheduler
+from repro.runtime.scheduler import RefreshCohorts, SlotScheduler
 
 
 @dataclasses.dataclass
@@ -88,7 +106,7 @@ def _bcast_to(mask1d: Array, leaf: Array) -> Array:
     return mask1d.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
 
-@partial(jax.jit, static_argnames=("cfg", "fused_infer"))
+@partial(jax.jit, static_argnames=("cfg", "fused_infer", "maintain_factor"))
 def _stream_step(
     cfg: DFRConfig,
     mask: Array,
@@ -103,6 +121,7 @@ def _stream_step(
     lr: Array,             # scalar base learning rate
     phase_steps: Array,    # scalar int32: slot steps of reservoir adaptation
     fused_infer: bool = True,
+    maintain_factor: bool = False,
 ) -> Tuple[OnlineState, Array, Dict[str, Array]]:
     """One server step: infer-before-update + train for every live slot.
 
@@ -144,7 +163,12 @@ def _stream_step(
 
     new_states, logits, metrics = jax.vmap(
         lambda st, u_s, len_s, y_s, w_s, lr_s, a_s: online_serve_step(
-            cfg, mask, st, u_s, len_s, y_s, lr_s, w_s, a_s
+            cfg, mask, st, u_s, len_s, y_s, lr_s, w_s, a_s,
+            # 'defer': fold the factor AFTER the liveness cond below - an
+            # inline fold under the conds keeps the pre-sweep factor alive,
+            # forcing XLA to copy the (S, s, s) buffer per rotation instead
+            # of updating it in place (see online_serve_step docstring)
+            maintain_factor="defer" if maintain_factor else False,
         )
     )(states, u, length, label, weight, lr_slot, acc_slot)
 
@@ -172,6 +196,16 @@ def _stream_step(
         ),
         (new_states, states),
     )
+    if maintain_factor:
+        # deferred rank-1 fold of the window into each slot's live factor
+        # (the rows are exactly the gated r~ rows accumulated into B above:
+        # dead/tail/adaptation-phase rows are zero, hence exact no-ops)
+        rt_rows = metrics.pop("rt_rows")
+        Lt = jax.vmap(ridge.cholupdate_window_t)(new_states.ridge.Lt, rt_rows)
+        new_states = dataclasses.replace(
+            new_states,
+            ridge=dataclasses.replace(new_states.ridge, Lt=Lt),
+        )
     return new_states, preds, metrics
 
 
@@ -201,6 +235,53 @@ def _stream_refresh(
     )
 
 
+def _scatter_readout(
+    states: OnlineState, Wt: Array, eligible: Array, rows: Array
+) -> OnlineState:
+    """Write refreshed readouts Wt (C, Ny, s) into slot rows ``rows`` where
+    ``eligible`` (S,) holds; everything else (and every non-readout leaf)
+    is untouched - a refresh only ever moves (W, b)."""
+    el = eligible[rows]
+    W_rows = jnp.where(el[:, None, None], Wt[..., :, :-1], states.params.W[rows])
+    b_rows = jnp.where(el[:, None], Wt[..., :, -1], states.params.b[rows])
+    params = dataclasses.replace(
+        states.params,
+        W=states.params.W.at[rows].set(W_rows),
+        b=states.params.b.at[rows].set(b_rows),
+    )
+    return dataclasses.replace(states, params=params)
+
+
+@jax.jit
+def _stream_refresh_rows(
+    states: OnlineState, beta: Array, eligible: Array, rows: Array
+) -> OnlineState:
+    """Recompute-mode cohort refresh: gather the due cohort's rows, run the
+    batched (s, s) Cholesky re-factorization over just those, scatter the
+    refreshed readouts back.  With ``rows = arange(S)`` this is leaf-for-leaf
+    identical to ``_stream_refresh`` (the staggering equivalence oracle)."""
+    Wt = ridge.ridge_cholesky_batched(
+        states.ridge.A[rows],
+        ridge.regularize(states.ridge.B[rows], beta),
+    )
+    return _scatter_readout(states, Wt, eligible, rows)
+
+
+@jax.jit
+def _stream_refresh_factor_rows(
+    states: OnlineState, eligible: Array, rows: Array
+) -> OnlineState:
+    """Incremental-mode cohort refresh: the due cohort's slots carry live
+    factors of B + beta I (maintained rank-1 inside the serve step), so the
+    refresh is one batched pair of blocked triangular substitutions -
+    O(s^2 Ny) per slot, no factorization.  Beta is baked into the live
+    factor at seeding."""
+    Wt = ridge.ridge_solve_from_factor_t_batched(
+        states.ridge.A[rows], states.ridge.Lt[rows]
+    )
+    return _scatter_readout(states, Wt, eligible, rows)
+
+
 # ---------------------------------------------------------------------------
 # The server
 # ---------------------------------------------------------------------------
@@ -213,6 +294,12 @@ class StreamServer:
     slot per step, samples padded to ``t_max`` timesteps.  Requests whose
     sample count is not a multiple of ``window`` get a zero-weighted tail
     (exact: dead samples contribute nothing - see ``online_step``).
+
+    Refresh policy (see the module docstring): ``refresh_mode`` picks
+    recompute (O(s^3) batched re-factorization) vs incremental (live rank-1
+    factor, O(s^2) solves); ``refresh_cohorts`` staggers the round over
+    round-robin slot cohorts with identical per-slot cadence.  The defaults
+    reproduce the PR-2 global-recompute behavior exactly.
     """
 
     def __init__(
@@ -227,7 +314,11 @@ class StreamServer:
         beta: float = 1e-2,
         mask: Optional[Array] = None,
         fused_infer: Optional[bool] = None,
+        refresh_mode: str = "recompute",
+        refresh_cohorts: int = 1,
     ):
+        if refresh_mode not in ("recompute", "incremental"):
+            raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
         self.cfg = cfg
         self.t_max = int(t_max)
         self.max_streams = int(max_streams)
@@ -236,6 +327,10 @@ class StreamServer:
         self.phase_steps = jnp.asarray(phase_steps, jnp.int32)
         self.refresh_every = int(refresh_every)
         self.beta = jnp.asarray(beta, cfg.dtype)
+        self.refresh_mode = refresh_mode
+        self.cohorts = RefreshCohorts(
+            self.max_streams, self.refresh_every, refresh_cohorts
+        )
         if fused_infer is None:
             # TPU: the one-call fused kernel (kernels.streaming) wins the
             # infer latency; CPU/XLA: reuse the serve step's shared forward
@@ -249,7 +344,11 @@ class StreamServer:
 
         self.sched = SlotScheduler(self.max_streams)
         self.slot_pos = np.zeros(self.max_streams, np.int64)  # samples consumed
-        single = init_state(cfg)
+        # incremental mode: admitted slots carry a live factor seeded for the
+        # empty system (sqrt(beta) I) - every later sample rotates it rank-1
+        single = init_state(
+            cfg, factor_beta=beta if refresh_mode == "incremental" else None
+        )
         self._fresh_row = single
         self.states: OnlineState = jax.tree_util.tree_map(
             lambda leaf: jnp.broadcast_to(
@@ -312,11 +411,25 @@ class StreamServer:
             jnp.asarray(u), jnp.asarray(length), jnp.asarray(label),
             jnp.asarray(weight), jnp.asarray(live), self.lr,
             self.phase_steps, fused_infer=self.fused_infer,
+            maintain_factor=(self.refresh_mode == "incremental"),
         )
         self.global_step += 1
-        if self.global_step % self.refresh_every == 0:
+        due = self.cohorts.due_slots(self.global_step)
+        if due is not None:
             eligible = self._refresh_eligible(jnp.asarray(live))
-            self.states = _stream_refresh(self.states, self.beta, eligible)
+            if len(due) < self.max_streams:
+                cohort = np.zeros((self.max_streams,), bool)
+                cohort[due] = True
+                eligible = eligible & jnp.asarray(cohort)
+            rows = jnp.asarray(due, jnp.int32)
+            if self.refresh_mode == "incremental":
+                self.states = _stream_refresh_factor_rows(
+                    self.states, eligible, rows
+                )
+            else:
+                self.states = _stream_refresh_rows(
+                    self.states, self.beta, eligible, rows
+                )
         preds_np = np.asarray(preds)   # blocks: the served predictions
         self.step_times_s.append(time.perf_counter() - t0)
 

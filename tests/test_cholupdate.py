@@ -1,0 +1,292 @@
+"""Property battery for the incremental rank-1 Cholesky engine.
+
+The contract under test (repro.core.ridge cholupdate_* + the Pallas tile
+kernel in repro.kernels.cholupdate):
+
+  * rank-1 update/downdate of a live factor matches re-factorization of
+    ``B +/- x x^T + beta I`` across random SPD systems and scales,
+  * downdate-after-update round-trips to the original factor,
+  * all forms agree to per-dtype tolerances: packed numpy oracle ==
+    packed jitted == dense == batched vmap == Pallas (interpret mode),
+  * a refresh from a maintained factor equals the full O(s^3) re-solve,
+  * the serve-step maintenance invariant  L L^T == B + beta I  holds.
+
+Randomized sweeps are hypothesis-driven (the CI property lane installs it);
+without hypothesis the same checks run on a small deterministic seed grid,
+so the battery never reduces to a silent skip.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import online, ridge
+from repro.core.types import DFRConfig
+from repro.kernels import ops
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback grid below still runs
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="optional dep: hypothesis property sweeps"
+)
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _spd(rng, s, scale, beta):
+    """Random SPD B (f64) + its lower factor, condition set by beta."""
+    R = rng.normal(size=(s, s + 4)) * scale
+    B = R @ R.T + beta * np.eye(s)
+    return B, np.linalg.cholesky(B)
+
+
+def _safe_downdate_vector(B, x, margin=0.9):
+    """Scale x so B - x x^T stays SPD: x^T B^{-1} x = margin^2 < 1."""
+    gamma = float(x @ np.linalg.solve(B, x))
+    return x * (margin / np.sqrt(gamma))
+
+
+# ---------------------------------------------------------------------------
+# Core checks (shared by the hypothesis sweeps and the deterministic grid)
+# ---------------------------------------------------------------------------
+
+
+def check_update_matches_refactorization(s, seed, scale, beta):
+    rng = np.random.default_rng(seed)
+    B, L = _spd(rng, s, scale, beta)
+    x = rng.normal(size=s) * scale
+
+    # packed numpy oracle (f64): the paper-shaped in-place sweep
+    P = np.asarray(ridge.pack_lower(L))
+    up = ridge.cholupdate_packed_numpy(P, x, s, 1.0)
+    ref_up = ridge.pack_lower(np.linalg.cholesky(B + np.outer(x, x)))
+    np.testing.assert_allclose(up, np.asarray(ref_up), rtol=1e-9, atol=1e-9)
+
+    # downdate against re-factorization of B - x x^T (kept SPD)
+    xd = _safe_downdate_vector(B, x)
+    dn = ridge.cholupdate_packed_numpy(P, xd, s, -1.0)
+    ref_dn = ridge.pack_lower(np.linalg.cholesky(B - np.outer(xd, xd)))
+    np.testing.assert_allclose(dn, np.asarray(ref_dn), rtol=1e-7, atol=1e-9)
+
+
+def check_downdate_after_update_roundtrips(s, seed, scale, beta):
+    rng = np.random.default_rng(seed)
+    B, L = _spd(rng, s, scale, beta)
+    x = rng.normal(size=s) * scale
+    P = np.asarray(ridge.pack_lower(L))
+    there = ridge.cholupdate_packed_numpy(P, x, s, 1.0)
+    back = ridge.cholupdate_packed_numpy(there, x, s, -1.0)
+    np.testing.assert_allclose(back, P, rtol=1e-9, atol=1e-9)
+
+    # the dense f32 form round-trips to f32 tolerance
+    L32, x32 = jnp.asarray(L, jnp.float32), jnp.asarray(x, jnp.float32)
+    scale_ref = float(np.abs(L).max())
+    there32 = ridge.cholupdate_dense(L32, x32, 1.0)
+    back32 = ridge.cholupdate_dense(there32, x32, -1.0)
+    np.testing.assert_allclose(
+        np.asarray(back32), np.asarray(L32),
+        atol=5e-4 * max(1.0, scale_ref), rtol=5e-4)
+
+
+def check_forms_agree(s, seed, scale, beta):
+    """packed jax == packed numpy == dense == batched == Pallas interpret."""
+    rng = np.random.default_rng(seed)
+    B, L = _spd(rng, s, scale, beta)
+    x = rng.normal(size=s) * scale
+
+    # oracle, pushed to f32 for comparison with the jitted f32 forms
+    oracle = ridge.cholupdate_packed_numpy(
+        np.asarray(ridge.pack_lower(L)), x, s, 1.0)
+    tol = dict(rtol=2e-4, atol=2e-4 * max(1.0, float(np.abs(oracle).max())))
+
+    P32 = jnp.asarray(ridge.pack_lower(L), jnp.float32)
+    x32 = jnp.asarray(x, jnp.float32)
+    packed = ridge.cholupdate_packed_jax(P32, x32, s, 1.0)
+    np.testing.assert_allclose(np.asarray(packed), oracle.astype(np.float32), **tol)
+
+    L32 = jnp.asarray(L, jnp.float32)
+    dense = ridge.cholupdate_dense(L32, x32, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(ridge.pack_lower(np.asarray(dense))), oracle, **tol)
+
+    # transposed in-state form: bit-identical to the lower sweep, transposed
+    dense_t = ridge.cholupdate_dense_t(L32.T, x32, 1.0)
+    np.testing.assert_array_equal(np.asarray(dense_t).T, np.asarray(dense))
+
+    # batched form: every member equals the single-system sweep bit-for-bit
+    k = 3
+    Lb = jnp.stack([L32] * k)
+    xb = jnp.asarray(rng.normal(size=(k, s)).astype(np.float32) * scale)
+    got = ridge.cholupdate_dense_batched(Lb, xb, 1.0)
+    for i in range(k):
+        np.testing.assert_array_equal(
+            np.asarray(got[i]), np.asarray(ridge.cholupdate_dense(L32, xb[i], 1.0)))
+
+    # Pallas tile kernel (interpret mode), identity-padded to the 128 lane:
+    # bit-identical to the jnp window sweep it adapts
+    win = ops.cholupdate_window(L32, x32[None, :], sign=1.0, backend="interpret")
+    np.testing.assert_array_equal(
+        np.asarray(win), np.asarray(ridge.cholupdate_window(L32, x32[None, :], 1.0)))
+
+
+def check_refresh_from_factor_matches_full(s, seed, scale, beta, ny=3, n_upd=6):
+    """A factor maintained by n_upd rank-1 sweeps refreshes to the same W~
+    as re-factorizing the accumulated B from scratch."""
+    rng = np.random.default_rng(seed)
+    L = np.sqrt(beta) * np.eye(s)        # seed_factor: empty system
+    B = np.zeros((s, s))
+    X = rng.normal(size=(n_upd, s)) * scale
+    for t in range(n_upd):
+        B = B + np.outer(X[t], X[t])
+    A = rng.normal(size=(ny, s)) * scale
+
+    L32 = ridge.cholupdate_window(
+        jnp.asarray(L, jnp.float32), jnp.asarray(X, jnp.float32), 1.0)
+    W_inc = ridge.ridge_solve_from_factor(jnp.asarray(A, jnp.float32), L32)
+    W_full = ridge.ridge_cholesky_blocked(
+        jnp.asarray(A, jnp.float32),
+        jnp.asarray(B + beta * np.eye(s), jnp.float32))
+    scale_w = max(1.0, float(jnp.max(jnp.abs(W_full))))
+    np.testing.assert_allclose(
+        np.asarray(W_inc), np.asarray(W_full), rtol=2e-3, atol=2e-3 * scale_w)
+
+    # the transposed maintenance path (what the stream server runs):
+    # window_t on U = L^T, then the plain / blocked batched substitutions
+    U32 = ridge.cholupdate_window_t(
+        jnp.asarray(L.T, jnp.float32), jnp.asarray(X, jnp.float32), 1.0)
+    np.testing.assert_array_equal(np.asarray(U32).T, np.asarray(L32))
+    W_t = ridge.ridge_solve_from_factor_t(jnp.asarray(A, jnp.float32), U32)
+    np.testing.assert_allclose(
+        np.asarray(W_t), np.asarray(W_full), rtol=2e-3, atol=2e-3 * scale_w)
+    W_tb = ridge.ridge_solve_from_factor_t_batched(
+        jnp.asarray(A, jnp.float32)[None], U32[None])[0]
+    np.testing.assert_allclose(
+        np.asarray(W_tb), np.asarray(W_full), rtol=2e-3, atol=2e-3 * scale_w)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @needs_hypothesis
+    @given(s=st.integers(2, 24), seed=st.integers(0, 10_000),
+           scale=st.floats(0.1, 3.0), beta=st.floats(1e-3, 10.0))
+    @settings(**SETTINGS)
+    def test_update_matches_refactorization(s, seed, scale, beta):
+        check_update_matches_refactorization(s, seed, scale, beta)
+
+    @needs_hypothesis
+    @given(s=st.integers(2, 24), seed=st.integers(0, 10_000),
+           scale=st.floats(0.1, 3.0), beta=st.floats(1e-3, 10.0))
+    @settings(**SETTINGS)
+    def test_downdate_after_update_roundtrips(s, seed, scale, beta):
+        check_downdate_after_update_roundtrips(s, seed, scale, beta)
+
+    @needs_hypothesis
+    @given(s=st.integers(2, 20), seed=st.integers(0, 10_000),
+           scale=st.floats(0.2, 2.0), beta=st.floats(1e-2, 10.0))
+    @settings(max_examples=10, deadline=None)  # includes the Pallas interpret run
+    def test_all_forms_agree(s, seed, scale, beta):
+        check_forms_agree(s, seed, scale, beta)
+
+    @needs_hypothesis
+    @given(s=st.integers(4, 24), seed=st.integers(0, 10_000),
+           scale=st.floats(0.2, 2.0), beta=st.floats(1e-2, 1.0))
+    @settings(**SETTINGS)
+    def test_refresh_from_factor_matches_full(s, seed, scale, beta):
+        check_refresh_from_factor_matches_full(s, seed, scale, beta)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic grid (runs with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+GRID = [(5, 0, 1.0, 1e-2), (12, 1, 0.3, 1e-1), (21, 2, 2.0, 1.0)]
+
+
+@pytest.mark.parametrize("s,seed,scale,beta", GRID)
+def test_update_matches_refactorization_grid(s, seed, scale, beta):
+    check_update_matches_refactorization(s, seed, scale, beta)
+
+
+@pytest.mark.parametrize("s,seed,scale,beta", GRID)
+def test_downdate_after_update_roundtrips_grid(s, seed, scale, beta):
+    check_downdate_after_update_roundtrips(s, seed, scale, beta)
+
+
+@pytest.mark.parametrize("s,seed,scale,beta", GRID)
+def test_all_forms_agree_grid(s, seed, scale, beta):
+    check_forms_agree(s, seed, scale, beta)
+
+
+@pytest.mark.parametrize("s,seed,scale,beta", GRID)
+def test_refresh_from_factor_matches_full_grid(s, seed, scale, beta):
+    check_refresh_from_factor_matches_full(s, seed, scale, beta)
+
+
+def test_window_equals_sequential_singles_and_zero_rows_noop():
+    rng = np.random.default_rng(7)
+    s = 17
+    _, L = _spd(rng, s, 1.0, 0.1)
+    L32 = jnp.asarray(L, jnp.float32)
+    X = jnp.asarray(rng.normal(size=(5, s)).astype(np.float32) * 0.5)
+    X = X.at[2].set(0.0)  # a gated (dead/tail) sample inside the window
+    got = ridge.cholupdate_window(L32, X, 1.0)
+    want = L32
+    for t in range(5):
+        if t != 2:
+            want = ridge.cholupdate_dense(want, X[t], 1.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the all-zero window is the exact identity
+    Z = jnp.zeros((4, s), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ridge.cholupdate_window(L32, Z, 1.0)), np.asarray(L32))
+
+
+def test_serve_step_maintains_factor_invariant():
+    """online_serve_step(maintain_factor=True): after any mix of live/dead
+    samples and adaptation/frozen phases,  L L^T == B + beta I  holds."""
+    cfg = DFRConfig(n_in=2, n_classes=3, n_nodes=6)
+    from repro.core import masking
+
+    mask = masking.make_mask(jax.random.PRNGKey(cfg.mask_seed), cfg.n_nodes,
+                             cfg.n_in, cfg.dtype)
+    beta = 0.05
+    state = online.init_state(cfg, factor_beta=beta)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        u = jnp.asarray(rng.normal(size=(3, 10, 2)).astype(np.float32))
+        ln = jnp.asarray(rng.integers(4, 11, 3), jnp.int32)
+        lab = jnp.asarray(rng.integers(0, 3, 3), jnp.int32)
+        w = jnp.asarray(rng.integers(0, 2, 3).astype(np.float32))
+        acc = jnp.asarray(float(i > 0))  # step 0: adaptation phase (gated)
+        state, _, _ = online.online_serve_step(
+            cfg, mask, state, u, ln, lab, jnp.float32(0.1), w, acc,
+            maintain_factor=True)
+    lhs = np.asarray(state.ridge.Lt.T @ state.ridge.Lt)
+    rhs = np.asarray(state.ridge.B + beta * jnp.eye(cfg.s, dtype=cfg.dtype))
+    np.testing.assert_allclose(lhs, rhs, rtol=5e-4,
+                               atol=5e-4 * max(1.0, np.abs(rhs).max()))
+    assert float(state.ridge.factor_beta) == pytest.approx(beta)
+
+    # refresh_output takes the fast path for the seeded beta and agrees
+    # with the full re-factorization to solver tolerance
+    fast = online.refresh_output(state, jnp.asarray(beta, cfg.dtype))
+    import dataclasses
+    dead = dataclasses.replace(
+        state, ridge=dataclasses.replace(
+            state.ridge, factor_beta=jnp.zeros_like(state.ridge.factor_beta)))
+    full = online.refresh_output(dead, jnp.asarray(beta, cfg.dtype))
+    np.testing.assert_allclose(np.asarray(fast.params.W),
+                               np.asarray(full.params.W), rtol=2e-3, atol=2e-4)
+
+    # a different beta must NOT use the live factor: it re-factorizes
+    other = online.refresh_output(state, jnp.asarray(10.0 * beta, cfg.dtype))
+    ref = online.refresh_output(dead, jnp.asarray(10.0 * beta, cfg.dtype))
+    np.testing.assert_array_equal(np.asarray(other.params.W),
+                                  np.asarray(ref.params.W))

@@ -1,5 +1,7 @@
 """Stream server: continuous batching retires/refills slots correctly,
-per-slot state isolation, and OnlineEnsemble(K=1) == OnlineDFR parity."""
+per-slot state isolation, OnlineEnsemble(K=1) == OnlineDFR parity, and the
+refresh-policy equivalences (staggered C=1 == global bit-for-bit,
+incremental == recompute to solver tolerance over a full episode)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -8,6 +10,7 @@ import pytest
 from repro.core import OnlineDFR, OnlineEnsemble, reset_statistics
 from repro.core.types import DFRConfig
 from repro.runtime import StreamRequest, StreamServer
+from repro.runtime.scheduler import RefreshCohorts
 
 
 CFG = DFRConfig(n_in=2, n_classes=3, n_nodes=8)
@@ -93,6 +96,105 @@ def test_per_slot_state_isolation_exact():
                   + [_make_stream(i, n, seed=20 + i)
                      for i, n in [(1, 9), (2, 14), (3, 6), (4, 10)]])
     assert alone[0] == crowd[0]
+
+
+# ---------------------------------------------------------------------------
+# Refresh policies: staggering and the incremental factor engine
+# ---------------------------------------------------------------------------
+
+
+def _serve_collect(streams, **kw):
+    srv = StreamServer(CFG, t_max=16, max_streams=3, window=2,
+                       phase_steps=2, refresh_every=3, **kw)
+    for s in streams:
+        srv.submit(s)
+    done = srv.run_until_drained()
+    return {r.rid: list(r.preds) for r in done}, srv
+
+
+def _episode_streams(n_streams=4, seed0=0):
+    return [_make_stream(i, n, seed=seed0 + i)
+            for i, n in enumerate([8, 6, 10, 4][:n_streams])]
+
+
+def test_refresh_cohorts_schedule():
+    """C=1 reduces to the global round; staggering keeps the exact per-slot
+    cadence (one refresh per refresh_every steps) with bounded cohorts."""
+    glob = RefreshCohorts(8, 5, 1)
+    assert [glob.due_cohort(t) for t in range(1, 11)] == \
+        [None, None, None, None, 0, None, None, None, None, 0]
+    assert glob.due_slots(5) == list(range(8))
+
+    stag = RefreshCohorts(8, 5, 4)
+    per_period = [stag.due_slots(t) or [] for t in range(5, 10)]
+    # every slot refreshed exactly once per period, <= ceil(8/4) per step
+    assert sorted(i for sl in per_period for i in sl) == list(range(8))
+    assert max(len(sl) for sl in per_period) == 2
+    # clamped: more cohorts than phases cannot keep the cadence
+    assert RefreshCohorts(8, 3, 7).n_cohorts == 3
+
+
+def test_staggered_cohort1_is_bitwise_the_global_refresh():
+    """The cohort-row refresh path at C=1 serves bit-identical predictions
+    and final states to the PR-2 global ``_stream_refresh``."""
+    import repro.runtime.stream_server as ss
+
+    def serve(force_global):
+        orig = ss._stream_refresh_rows
+        if force_global:
+            ss._stream_refresh_rows = (
+                lambda states, beta, eligible, rows:
+                    ss._stream_refresh(states, beta, eligible))
+        try:
+            return _serve_collect(_episode_streams())
+        finally:
+            ss._stream_refresh_rows = orig
+
+    preds_g, srv_g = serve(True)
+    preds_r, srv_r = serve(False)
+    assert preds_g == preds_r
+    for a, b in zip(jax.tree_util.tree_leaves(srv_g.states),
+                    jax.tree_util.tree_leaves(srv_r.states)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incremental_refresh_matches_recompute_over_episode():
+    """A full run_until_drained episode under refresh_mode='incremental'
+    (live rank-1-maintained factors, O(s^2) refresh solves) serves the same
+    streams as global recompute with near-identical predictions, and the
+    retired models agree to solver tolerance."""
+    preds_rec, srv_rec = _serve_collect(_episode_streams())
+    preds_inc, srv_inc = _serve_collect(_episode_streams(),
+                                        refresh_mode="incremental")
+    assert sorted(preds_rec) == sorted(preds_inc)
+    total = agree = 0
+    for rid in preds_rec:
+        assert len(preds_rec[rid]) == len(preds_inc[rid])
+        total += len(preds_rec[rid])
+        agree += sum(int(a == b)
+                     for a, b in zip(preds_rec[rid], preds_inc[rid]))
+    assert agree / total >= 0.97  # float drift may flip a borderline argmax
+
+    for r_rec, r_inc in zip(sorted(srv_rec.completed, key=lambda r: r.rid),
+                            sorted(srv_inc.completed, key=lambda r: r.rid)):
+        w_rec = np.asarray(r_rec.final_state.params.W)
+        w_inc = np.asarray(r_inc.final_state.params.W)
+        np.testing.assert_allclose(
+            w_inc, w_rec, rtol=5e-3,
+            atol=5e-3 * max(1.0, np.abs(w_rec).max()))
+        # the incremental slot kept its factor live the whole episode
+        assert float(r_inc.final_state.ridge.factor_beta) > 0
+
+
+def test_staggered_refresh_serves_every_stream_correctly():
+    """C>1 staggering (both modes) still serves every sample of every
+    stream; per-slot refresh cadence changes only latency, not coverage."""
+    for kw in ({"refresh_cohorts": 3},
+               {"refresh_cohorts": 3, "refresh_mode": "incremental"}):
+        preds, srv = _serve_collect(_episode_streams(), **kw)
+        assert sorted(preds) == [0, 1, 2, 3]
+        for r in srv.completed:
+            assert len(r.preds) == r.n_samples
 
 
 # ---------------------------------------------------------------------------
