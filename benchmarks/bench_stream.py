@@ -35,13 +35,25 @@ once-per-round LAPACK O(s^3), and recompute wins throughput again.  At
 Nx=8 (s = 73) the factorization is cheap enough that all policies tie on
 throughput and staggering only adds dispatch overhead - reported as-is.
 
+Third table (ISSUE 4, ``drift``): piecewise-stationary NARMA streams
+(``repro.data.make_narma10_drift``: the input->output dynamics switch at a
+known sample) served under the three retirement policies.  Columns are the
+online infer-before-update accuracy just *before* the drift point, right
+*at* it, and over the stream tail (*post*, after the policies had time to
+re-track), plus served-samples/sec - the cost of retirement.  The honest
+story: every policy craters AT the switch (no oracle knows the plant
+changed), the growing-memory baseline never recovers (its (A, B) stay
+anchored to a regime that no longer exists), and the forget/window paths
+climb back to near pre-drift accuracy at a modest throughput cost (the
+window path pays the extra per-sample eviction downdate).
+
     PYTHONPATH=src python benchmarks/bench_stream.py [--smoke|--full]
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +61,7 @@ import numpy as np
 
 from repro.core import OnlineDFR
 from repro.core.types import DFRConfig
+from repro.data import drift_segment_bounds, make_drift_label_streams
 from repro.runtime import StreamRequest, StreamServer
 
 
@@ -219,6 +232,94 @@ def _bench_refresh_case(n_streams: int, n_samples: int, t_len: int,
     return row
 
 
+# ---------------------------------------------------------------------------
+# Drift table: retirement policies on piecewise-stationary streams
+# ---------------------------------------------------------------------------
+
+DRIFT_POLICIES: Tuple[Tuple[str, Dict], ...] = (
+    ("baseline", {}),                                      # growing memory
+    ("forget", {"retirement": "forget"}),                  # lambda filled in
+    ("window", {"retirement": "window"}),                  # capacity filled in
+)
+
+
+def _make_drift_streams(
+    n_streams: int, n_samples: int, t_len: int, n_classes: int, seed: int = 0
+) -> Tuple[List[StreamRequest], List[int]]:
+    """The shared drift fixture (``repro.data.make_drift_label_streams``)
+    wrapped into serving requests."""
+    arrays, switches = make_drift_label_streams(
+        n_streams, n_samples, t_len, n_classes, seed=seed
+    )
+    streams = [StreamRequest(rid=rid, **arr) for rid, arr in enumerate(arrays)]
+    return streams, switches
+
+
+def _segment_accuracy(req: StreamRequest, lo: int, hi: int) -> float:
+    preds = np.asarray(req.preds[lo:hi])
+    return float((preds == req.label[lo:hi]).mean())
+
+
+def _bench_drift_case(
+    n_streams: int, n_samples: int, t_len: int, n_nodes: int, window: int,
+    reps: int = 2, forget: float = 0.95, retire_frac: float = 0.25,
+    n_classes: int = 4,
+) -> Dict:
+    """One drift-recovery comparison cell.
+
+    Accuracy segments: ``pre`` = the ``seg`` samples before the switch,
+    ``at`` = the ``seg/2`` right after it, ``post`` = the stream tail.
+    Throughput is best-of-``reps`` after a warm (compile-absorbing) run,
+    same discipline as the other tables.
+    """
+    cfg = DFRConfig(n_in=1, n_classes=n_classes, n_nodes=n_nodes)
+    assert n_samples % window == 0
+    retire_window = max(window, int(n_samples * retire_frac))
+    total_samples = n_streams * n_samples
+
+    row: Dict = {
+        "table": "drift",
+        "cell": f"S{n_streams}/N{n_samples}/Nx{n_nodes}/W{window}",
+        "forget_lambda": forget,
+        "window_capacity": retire_window,
+    }
+    base_time = None
+    for name, kw in DRIFT_POLICIES:
+        kw = dict(kw)
+        if kw.get("retirement") == "forget":
+            kw["forget"] = forget
+        if kw.get("retirement") == "window":
+            kw["retire_window"] = retire_window
+
+        def run_once():
+            streams, switches = _make_drift_streams(
+                n_streams, n_samples, t_len, n_classes
+            )
+            elapsed, _ = _serve_batched(
+                cfg, streams, t_len, window, phase_steps=3, refresh_every=2,
+                refresh_mode="incremental", **kw,
+            )
+            return elapsed, streams, switches
+
+        run_once()  # warm the jitted step/refresh programs
+        best_t, streams, switches = None, None, None
+        for _ in range(reps):
+            t, st, sw = run_once()
+            if best_t is None or t < best_t:
+                best_t, streams, switches = t, st, sw
+        pre, at, post = drift_segment_bounds(n_samples, switches[0], window)
+        for seg_name, (lo, hi) in (("pre", pre), ("at", at), ("post", post)):
+            row[f"{name}_{seg_name}_acc"] = round(float(np.mean(
+                [_segment_accuracy(r, lo, hi) for r in streams])), 3)
+        row[f"{name}_samples_per_s"] = round(total_samples / best_t, 1)
+        if name == "baseline":
+            base_time = best_t
+        else:
+            # retirement overhead: < 1.0 means the policy costs throughput
+            row[f"{name}_throughput_ratio"] = round(base_time / best_t, 2)
+    return row
+
+
 def run(full: bool = False, smoke: bool = False) -> List[Dict]:
     # The batched step amortizes dispatch + the per-window small-op work
     # across all S slots; the headline Nx=8/S=16 regime is where the >= 3x
@@ -230,21 +331,29 @@ def run(full: bool = False, smoke: bool = False) -> List[Dict]:
     # window=1 is the paper's sample-by-sample serving regime where the
     # refresh dominates at Nx=16; window=8 is the honest mass-arrival
     # column where recompute still wins (see module docstring)
+    # drift cases (n_streams, n_samples, t_len, n_nodes, window): streams
+    # long enough that the retirement policies have post-switch samples to
+    # re-track with (the post segment is the last n/5)
     if smoke:
         cases = [(4, 8, 16, 8)]
         refresh_cases = [(4, 8, 16, 8, 1)]
+        drift_cases = [(2, 64, 16, 8, 4)]
     elif full:
         cases = [(16, 24, 24, 8), (16, 24, 24, 16), (16, 64, 32, 16),
                  (12, 24, 24, 30)]
         refresh_cases = [(16, 20, 24, 8, 1), (16, 20, 24, 16, 1),
                          (32, 20, 24, 16, 1), (16, 80, 24, 16, 8),
                          (32, 20, 24, 8, 1)]
+        drift_cases = [(4, 160, 16, 8, 4), (4, 160, 16, 16, 4),
+                       (8, 160, 16, 16, 1)]
     else:
         cases = [(16, 24, 24, 8), (16, 24, 24, 16)]
         refresh_cases = [(16, 20, 24, 8, 1), (16, 20, 24, 16, 1),
                          (32, 20, 24, 16, 1), (16, 80, 24, 16, 8)]
+        drift_cases = [(4, 160, 16, 8, 4), (4, 160, 16, 16, 4)]
     rows = [_bench_case(*c) for c in cases]
     rows += [_bench_refresh_case(*c) for c in refresh_cases]
+    rows += [_bench_drift_case(*c) for c in drift_cases]
     return rows
 
 

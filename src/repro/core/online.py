@@ -100,7 +100,9 @@ def init_state(cfg: DFRConfig, factor_beta: Optional[float] = None) -> OnlineSta
 
 
 def reset_statistics(
-    state: OnlineState, factor_beta: Optional[float] = None
+    state: OnlineState,
+    factor_beta: Optional[float] = None,
+    forget: Optional[Array] = None,
 ) -> OnlineState:
     """Zero the Ridge sufficient statistics, keeping (p, q, W, b) and the
     step counter.
@@ -114,7 +116,44 @@ def reset_statistics(
     The zeroed ``factor_beta`` also drops any live incremental factor (it
     factored the stale B); pass ``factor_beta`` to re-seed a fresh live
     factor for the restarted statistics, as ``init_state`` does.
+
+    ``forget`` (exclusive with ``factor_beta``) is the *soft* reset: one
+    forgetting-factor application that scales (A, B) - and any live factor
+    consistently, ``Lt`` by sqrt(lambda) and ``factor_beta`` by lambda, so
+    ``Lt^T Lt == B + factor_beta I`` is preserved exactly - instead of
+    zeroing.  ``forget=1.0`` is bit-for-bit the identity (multiplying by
+    1.0 changes no value); the sample ``count`` keeps the raw number of
+    folded samples either way.
     """
+    if forget is not None and factor_beta is not None:
+        raise ValueError(
+            "reset_statistics: factor_beta (hard reset re-seed) and forget "
+            "(soft decaying reset) are exclusive - the soft reset keeps the "
+            "existing decayed prior"
+        )
+    if forget is not None:
+        try:
+            lam_concrete = float(forget)
+        except TypeError:          # traced value: the caller holds the
+            lam_concrete = None    # (0, 1] contract (as StreamServer does)
+        if lam_concrete is not None and not 0.0 < lam_concrete <= 1.0:
+            # lambda = 0 would zero the live factor, and the next
+            # maintained fold divides by its zero diagonal -> NaNs
+            raise ValueError(
+                f"forget must be in (0, 1], got {lam_concrete!r}"
+            )
+        lam = jnp.asarray(forget, state.ridge.B.dtype)
+        rs = RidgeState(
+            A=state.ridge.A * lam,
+            B=state.ridge.B * lam,
+            count=state.ridge.count,
+            Lt=state.ridge.Lt * jnp.sqrt(lam),
+            factor_beta=state.ridge.factor_beta * lam,
+        )
+        return OnlineState(
+            params=state.params, ridge=rs,
+            step=state.step, loss_ema=state.loss_ema,
+        )
     rs = jax.tree_util.tree_map(jnp.zeros_like, state.ridge)
     if factor_beta is not None:
         rs = RidgeState(
@@ -252,6 +291,7 @@ def online_serve_step(
     weight: Array,   # (B,) 0/1 live-sample mask
     accumulate: Array,  # scalar 0/1: accumulate (A, B) this step?
     maintain_factor: "bool | str" = False,  # False | True | 'defer'
+    forget: Optional[Array] = None,  # lambda in (0, 1]: decay per sample
 ) -> Tuple[OnlineState, Array, Dict[str, Array]]:
     """Fused infer-before-update + train step for the serving path.
 
@@ -291,6 +331,30 @@ def online_serve_step(
     S=32, Nx=16).  Numerically identical to the inline fold: dead/tail
     rows are zero-gated no-ops either way.
 
+    ``forget`` (static None, or a traced lambda in (0, 1]) is the
+    forgetting-factor retirement: *before each accumulated sample's fold*,
+    (A, B) are scaled by lambda and the live factor by sqrt(lambda), the
+    exponentially-weighted RLS recursion
+
+        B <- lambda B + r~ r~^T,   A <- lambda A + onehot x r~.
+
+    The regularizing prior decays with everything else (``factor_beta``
+    picks up the same lambda^m), so the decomposition stays consistent:
+    scaling commutes with the rank-1 rotation, and
+    ``Lt^T Lt == B + factor_beta I`` keeps holding - exactly in real
+    arithmetic, to fp rounding in practice (the (A, B) side applies
+    closed-form lambda powers, the factor side one sqrt(lambda) per row;
+    the interleaved property battery pins the tolerance).  Decay is
+    applied once per *accumulated live sample* (dead/tail rows and
+    adaptation-phase windows decay nothing), so its meaning is independent
+    of the serving window size.  The equivalence contract: ``forget=1.0``
+    is bit-for-bit the ``forget=None`` path (every scaling is a multiply
+    by exactly 1.0), and ``forget=None`` compiles no decay math at all.
+    With ``maintain_factor='defer'`` the per-row factor scalings are
+    returned as ``metrics['fold_scale']`` (sqrt(lambda) for live rows,
+    exactly 1.0 for gated rows) for the caller's
+    ``ridge.cholupdate_window_t_decay`` fold.
+
     Returns (new state, logits (B, Ny), metrics).
     """
     f = cfg.f()
@@ -308,9 +372,31 @@ def online_serve_step(
     params = backprop.apply_sgd(state.params, g, lr, lr, inv_batch=inv)
 
     acc = accumulate.astype(cfg.dtype)
-    rt = dprr.r_tilde(aux.r) * (w * acc)[:, None]
+    live = w * acc                              # (B,) 0/1 accumulated rows
+    rt = dprr.r_tilde(aux.r) * live[:, None]
+    if forget is None:
+        A_base, B_base = state.ridge.A, state.ridge.B
+        decay = None
+        rt_acc, oh_acc = rt, onehot
+        fold_scale = None
+    else:
+        lam = jnp.asarray(forget, cfg.dtype)
+        m = jnp.sum(live)
+        # suffix_t: live rows folded strictly after row t - the later a
+        # sample lands, the less it has decayed.  Each row's (A, B)
+        # contribution carries lambda^suffix, split sqrt/sqrt between the
+        # two accumulate_ab factors; the carried-over statistics decay by
+        # the full lambda^m.  lambda=1 makes every power exactly 1.0.
+        suffix = jnp.cumsum(live[::-1])[::-1] - live
+        half = lam ** (0.5 * suffix)
+        rt_acc = rt * half[:, None]
+        oh_acc = onehot * half[:, None]
+        decay = lam ** m
+        A_base, B_base = state.ridge.A * decay, state.ridge.B * decay
+        fold_scale = jnp.where(live > 0, jnp.sqrt(lam), jnp.ones_like(live))
     dA, dB = ridge.accumulate_ab(
-        jnp.zeros_like(state.ridge.A), jnp.zeros_like(state.ridge.B), rt, onehot
+        jnp.zeros_like(state.ridge.A), jnp.zeros_like(state.ridge.B),
+        rt_acc, oh_acc,
     )
     if maintain_factor == "defer":
         # caller folds rt into the factor itself (see docstring)
@@ -321,7 +407,10 @@ def online_serve_step(
         # sweep per streamed sample (zero rows are exact no-ops, so dead
         # samples and adaptation-phase windows leave the factor untouched -
         # in lockstep with the gated B accumulation above)
-        Lt = ridge.cholupdate_window_t(state.ridge.Lt, rt)
+        if forget is None:
+            Lt = ridge.cholupdate_window_t(state.ridge.Lt, rt)
+        else:
+            Lt = ridge.cholupdate_window_t_decay(state.ridge.Lt, rt, fold_scale)
         factor_beta = state.ridge.factor_beta
     else:
         Lt = state.ridge.Lt
@@ -331,11 +420,15 @@ def online_serve_step(
             jnp.zeros_like(state.ridge.factor_beta),
             state.ridge.factor_beta,
         )
+    if forget is not None and maintain_factor:
+        # the prior decays with the data (exponentially-weighted RLS), so
+        # the factor keeps factoring  B + factor_beta I  exactly
+        factor_beta = factor_beta * decay
     new = OnlineState(
         params=params,
         ridge=RidgeState(
-            A=state.ridge.A + dA,
-            B=state.ridge.B + dB,
+            A=A_base + dA,
+            B=B_base + dB,
             count=state.ridge.count
             + (acc * jnp.sum(w)).astype(state.ridge.count.dtype),
             Lt=Lt,
@@ -348,6 +441,8 @@ def online_serve_step(
     metrics = {"loss": loss * inv, "acc": jnp.sum(hits) * inv}
     if maintain_factor == "defer":
         metrics["rt_rows"] = rt
+        if forget is not None:
+            metrics["fold_scale"] = fold_scale
     return new, aux.logits, metrics
 
 

@@ -460,10 +460,46 @@ def ridge_solve_batched(A: Array, B: Array, method: str = "cholesky_blocked") ->
 #     The Pallas tile kernel in ``repro.kernels.cholupdate`` runs the same
 #     sweep with the factor resident in VMEM.
 #
-# The downdate requires  x^T (L L^T)^{-1} x < 1  (the result must stay SPD);
-# like the factorizations above, the sweep assumes a positive diagonal and
-# does not guard degenerate input.
+# The downdate requires  x^T (L L^T)^{-1} x < 1  (the result must stay SPD).
+# Degenerate downdates are *guarded*, not NaN-propagated: every rotation
+# whose radicand  d_k^2 - x_k^2  falls at or below ``DOWNDATE_GUARD_REL *
+# d_k^2`` is skipped entirely (the factor column, diagonal and the rotated x
+# are left untouched), so the factor always stays finite, triangular and
+# positive-diagonal.  The ``*_guarded`` variants additionally return an
+# ``ok`` flag so callers can fall back to a full re-factorization (the
+# stream server's sliding-window retirement does exactly that); the
+# unflagged forms share the same clamp but silently degrade to "factor no
+# longer matches B - x x^T" - documented, tested behavior instead of NaNs.
+# The packed numpy *oracle* raises ``numpy.linalg.LinAlgError`` instead:
+# as the reference implementation it must never return a silently-wrong
+# factor.  The sweeps still assume a positive diagonal on entry (the same
+# contract as the factorizations above).
 # ---------------------------------------------------------------------------
+
+# Relative radicand floor of the downdate guard: a rotation with
+# d_k^2 + sign * x_k^2 <= DOWNDATE_GUARD_REL * d_k^2 is treated as
+# indefinite (it would zero or destroy the diagonal in working precision).
+# Only reachable for sign=-1: the update radicand is >= d_k^2.
+DOWNDATE_GUARD_REL = 1e-6
+
+
+def _guarded_rotation(dk, xk, sign):
+    """One rotation's (r, c, s) with the downdate guard applied.
+
+    Good rotations (radicand > DOWNDATE_GUARD_REL * d_k^2 - every update,
+    and every downdate that keeps the diagonal safely positive) compute
+    bit-identically to the unguarded sweep.  Bad rotations degrade to the
+    exact identity (r = d_k, c = 1, s = 0: column, diagonal and x all
+    untouched) and raise the returned ``bad`` flag.  Shared by every jax
+    sweep in this module and the Pallas tile kernel in
+    ``repro.kernels.cholupdate`` so all forms stay bit-parity-comparable.
+    """
+    rad = dk * dk + sign * xk * xk
+    bad = rad <= DOWNDATE_GUARD_REL * (dk * dk)
+    r = jnp.where(bad, dk, jnp.sqrt(jnp.where(bad, jnp.ones_like(rad), rad)))
+    c = r / dk
+    sk = jnp.where(bad, jnp.zeros_like(xk), xk / dk)
+    return r, c, sk, bad
 
 
 def pad_factor_identity(F: Array, pad: int) -> Array:
@@ -502,12 +538,23 @@ def cholupdate_packed_numpy(P: np.ndarray, x: np.ndarray, s: int,
     factor of B + sign * x x^T.  In-place update order: one rotation per
     column k, touching only packed column k and the tail of x - the same
     storage discipline as Algorithms 2-4.
+
+    Raises ``numpy.linalg.LinAlgError`` on an indefinite downdate (a
+    rotation radicand <= 0, i.e. ``x^T (C C^T)^{-1} x >= 1``): the oracle
+    never returns a silently-NaN factor.  The production jax forms clamp
+    and signal instead (see the section comment / ``*_guarded``).
     """
     P = np.array(P, copy=True)
     x = np.array(x, copy=True).astype(P.dtype)
     for k in range(s):
         dk = P[k * (k + 1) // 2 + k]
-        r = np.sqrt(dk * dk + sign * x[k] * x[k])
+        rad = dk * dk + sign * x[k] * x[k]
+        if rad <= 0.0:
+            raise np.linalg.LinAlgError(
+                f"indefinite downdate: rotation {k} radicand {rad!r} <= 0 "
+                "(x^T B^{-1} x >= 1; the downdated matrix is not SPD)"
+            )
+        r = np.sqrt(rad)
         c = r / dk
         sk = x[k] / dk
         P[k * (k + 1) // 2 + k] = r
@@ -531,9 +578,7 @@ def cholupdate_packed_jax(P: Array, x: Array, s: int, sign=1.0) -> Array:
         colk = P[col_starts + k]  # C[:, k], valid where ar >= k
         dk = colk[k]
         xk = x[k]
-        r = jnp.sqrt(dk * dk + sign * xk * xk)
-        c = r / dk
-        sk = xk / dk
+        r, c, sk, _ = _guarded_rotation(dk, xk, sign)
         new = (colk + sign * sk * x) / c
         new = jnp.where(ar > k, new, colk).at[k].set(r)
         x = jnp.where(ar > k, c * x - sk * new, x)
@@ -544,32 +589,56 @@ def cholupdate_packed_jax(P: Array, x: Array, s: int, sign=1.0) -> Array:
     return P
 
 
-def _cholupdate_dense(L: Array, x: Array, sign) -> Array:
-    """One rotation sweep over a dense lower factor (vectorized columns)."""
+def _cholupdate_dense_flagged(L: Array, x: Array, sign) -> Tuple[Array, Array]:
+    """One rotation sweep over a dense lower factor (vectorized columns).
+
+    Returns (L', bad): ``bad`` is True iff any rotation hit the downdate
+    guard (and was skipped - see the section comment)."""
     n = L.shape[0]
     ridx = jnp.arange(n)
 
     def rot_k(k, carry):
-        L, x = carry
+        L, x, bad_any = carry
         dk = L[k, k]
         xk = x[k]
-        r = jnp.sqrt(dk * dk + sign * xk * xk)
-        c = r / dk
-        sk = xk / dk
+        r, c, sk, bad = _guarded_rotation(dk, xk, sign)
         col = (L[:, k] + sign * sk * x) / c
         col = jnp.where(ridx > k, col, L[:, k]).at[k].set(r)
         L = L.at[:, k].set(col)
         x = jnp.where(ridx > k, c * x - sk * col, x)
-        return L, x
+        return L, x, bad_any | bad
 
-    L, _ = jax.lax.fori_loop(0, n, rot_k, (L, x))
-    return L
+    L, _, bad = jax.lax.fori_loop(
+        0, n, rot_k, (L, x, jnp.zeros((), jnp.bool_))
+    )
+    return L, bad
+
+
+def _cholupdate_dense(L: Array, x: Array, sign) -> Array:
+    return _cholupdate_dense_flagged(L, x, sign)[0]
 
 
 @jax.jit
 def cholupdate_dense(L: Array, x: Array, sign=1.0) -> Array:
-    """Rank-1 update/downdate of a dense lower factor: L (s, s), x (s,)."""
+    """Rank-1 update/downdate of a dense lower factor: L (s, s), x (s,).
+
+    Indefinite downdate rotations are clamp-skipped (finite result, no
+    NaNs) - use ``cholupdate_dense_guarded`` when the caller needs to know.
+    """
     return _cholupdate_dense(L, x, jnp.asarray(sign, L.dtype))
+
+
+@jax.jit
+def cholupdate_dense_guarded(L: Array, x: Array, sign=1.0) -> Tuple[Array, Array]:
+    """``cholupdate_dense`` + guard flag: returns (L', ok).
+
+    ``ok`` is False iff a rotation was guard-skipped (the downdate would
+    have driven the diagonal non-positive); the returned factor is then
+    still finite, triangular and positive-diagonal, but no longer factors
+    ``B + sign * x x^T`` - re-factorize from the statistics.
+    """
+    L, bad = _cholupdate_dense_flagged(L, x, jnp.asarray(sign, L.dtype))
+    return L, ~bad
 
 
 @jax.jit
@@ -592,7 +661,7 @@ def cholupdate_window(L: Array, X: Array, sign=1.0) -> Array:
     return jax.lax.fori_loop(0, X.shape[0], fold, L)
 
 
-def _cholupdate_dense_t(U: Array, x: Array, sign) -> Array:
+def _cholupdate_dense_t_flagged(U: Array, x: Array, sign) -> Tuple[Array, Array]:
     """The rotation sweep on the *transposed* factor U = L^T.
 
     Column k of L is row k of U - a contiguous read/write in row-major
@@ -601,27 +670,32 @@ def _cholupdate_dense_t(U: Array, x: Array, sign) -> Array:
     why the in-state factor (``RidgeState.Lt``) is stored transposed: the
     vmapped per-slot sweep runs ~2x faster than the column form at the
     server's (S, s, s) shapes.  Bit-identical to
-    ``cholupdate_dense(U.T, x).T``.
+    ``cholupdate_dense(U.T, x).T``.  Returns (U', bad) - see
+    ``_cholupdate_dense_flagged``.
     """
     n = U.shape[0]
     cidx = jnp.arange(n)
 
     def rot_k(k, carry):
-        U, x = carry
+        U, x, bad_any = carry
         rowk = U[k]
         dk = rowk[k]
         xk = x[k]
-        r = jnp.sqrt(dk * dk + sign * xk * xk)
-        c = r / dk
-        sk = xk / dk
+        r, c, sk, bad = _guarded_rotation(dk, xk, sign)
         new = (rowk + sign * sk * x) / c
         new = jnp.where(cidx > k, new, rowk).at[k].set(r)
         U = U.at[k].set(new)
         x = jnp.where(cidx > k, c * x - sk * new, x)
-        return U, x
+        return U, x, bad_any | bad
 
-    U, _ = jax.lax.fori_loop(0, n, rot_k, (U, x))
-    return U
+    U, _, bad = jax.lax.fori_loop(
+        0, n, rot_k, (U, x, jnp.zeros((), jnp.bool_))
+    )
+    return U, bad
+
+
+def _cholupdate_dense_t(U: Array, x: Array, sign) -> Array:
+    return _cholupdate_dense_t_flagged(U, x, sign)[0]
 
 
 @jax.jit
@@ -630,12 +704,40 @@ def cholupdate_dense_t(U: Array, x: Array, sign=1.0) -> Array:
     return _cholupdate_dense_t(U, x, jnp.asarray(sign, U.dtype))
 
 
+@jax.jit
+def cholupdate_dense_t_guarded(U: Array, x: Array, sign=1.0) -> Tuple[Array, Array]:
+    """``cholupdate_dense_guarded`` on the transposed factor: (U', ok)."""
+    U, bad = _cholupdate_dense_t_flagged(U, x, jnp.asarray(sign, U.dtype))
+    return U, ~bad
+
+
 def cholupdate_window_t(U: Array, X: Array, sign=1.0) -> Array:
     """``cholupdate_window`` on the transposed in-state factor."""
     sg = jnp.asarray(sign, U.dtype)
 
     def fold(t, U):
         return _cholupdate_dense_t(U, X[t], sg)
+
+    return jax.lax.fori_loop(0, X.shape[0], fold, U)
+
+
+def cholupdate_window_t_decay(
+    U: Array, X: Array, scale: Array, sign=1.0
+) -> Array:
+    """``cholupdate_window_t`` with a per-row pre-scaling of the factor.
+
+    Before rotating row t of X into U, the whole factor is scaled by
+    ``scale[t]`` - the forgetting-factor hook: with scale[t] = sqrt(lambda)
+    for live rows (and exactly 1.0 for dead/gated rows, an exact bitwise
+    no-op), the maintained system decays as  L L^T <- lambda L L^T + x x^T
+    per retained sample, which is exact because scaling commutes with the
+    rank-1 rotation.  ``scale = ones`` reduces to ``cholupdate_window_t``
+    bit-for-bit (multiplication by 1.0 is the identity).
+    """
+    sg = jnp.asarray(sign, U.dtype)
+
+    def fold(t, U):
+        return _cholupdate_dense_t(U * scale[t], X[t], sg)
 
     return jax.lax.fori_loop(0, X.shape[0], fold, U)
 

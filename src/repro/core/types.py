@@ -168,6 +168,52 @@ class RidgeState:
         )
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowState:
+    """Fixed-shape ring buffer of the last ``capacity`` *retained* samples
+    for sliding-window retirement (one per stream slot; the stream server
+    batches a leading slot axis onto every leaf).
+
+    ``rows[pos]`` is the next eviction victim: when a new sample is
+    retained with the buffer full, the overwritten row is subtracted back
+    out of (A, B) and hyperbolically downdated out of the live Cholesky
+    factor - the runtime path that turns the growing-memory incremental
+    engine into a drift-tracking one.  Zero rows mark never-written
+    capacity: every r~ row ends in the constant-1 feature
+    (``dprr.r_tilde``), so ``rows[i, -1] == 0`` <=> slot i is empty, and
+    evicting an empty row is an exact no-op everywhere (subtracting zeros,
+    downdating by the zero vector) - no separate validity mask is needed,
+    and a capacity >= the stream length is bit-for-bit the non-retiring
+    path.
+
+    rows:   (capacity, s)  retained r~ rows, ring order.
+    onehot: (capacity, Ny) the matching label one-hots (A's other factor).
+    pos:    scalar int32 write cursor (next slot to evict/overwrite).
+    """
+
+    rows: Array
+    onehot: Array
+    pos: Array
+
+    def tree_flatten(self):
+        return (self.rows, self.onehot, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, capacity: int, s: int, n_classes: int,
+              dtype=jnp.float32) -> "WindowState":
+        return cls(
+            rows=jnp.zeros((capacity, s), dtype),
+            onehot=jnp.zeros((capacity, n_classes), dtype),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class RegressionBatch:
     """A padded batch of input series with continuous targets.

@@ -1,8 +1,14 @@
 from repro.data.timeseries import (  # noqa: F401
+    NARMA_COEFFS,
     PAPER_DATASETS,
     DatasetSpec,
+    drift_segment_bounds,
     load,
     make_dataset,
+    make_drift_label_streams,
     make_narma10,
+    make_narma10_drift,
     narma10_series,
+    narma_series_coeffs,
+    quantize_targets,
 )

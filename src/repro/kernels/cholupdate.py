@@ -30,6 +30,13 @@ Zero rows are exact no-ops (r = d, c = 1, s = 0), so callers gate dead/tail
 samples by zero-scaling rows - the serving runtime's 0/1 weight discipline.
 Wrappers with padding contracts and backend dispatch: ``repro.kernels.ops.
 cholupdate_window``.
+
+Both signs dispatch through the same sweep: sign=-1 is the hyperbolic
+downdate (the sliding-window retirement path), with the shared downdate
+guard (``repro.core.ridge._guarded_rotation``): an indefinite rotation is
+clamp-skipped in VMEM exactly as in the jnp sweep, so the kernel stays
+bit-parity-comparable and never writes NaNs back; callers that need the
+guard *flag* (to trigger re-factorization) use the core guarded forms.
 """
 from __future__ import annotations
 
@@ -39,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ridge import _guarded_rotation
 
 
 def _cholupd_tile(L: jax.Array, X: jax.Array, sign: float) -> jax.Array:
@@ -51,9 +60,7 @@ def _cholupd_tile(L: jax.Array, X: jax.Array, sign: float) -> jax.Array:
         L, x = carry
         dk = L[k, k]
         xk = x[k]
-        r = jnp.sqrt(dk * dk + sign * xk * xk)
-        c = r / dk
-        sk = xk / dk
+        r, c, sk, _ = _guarded_rotation(dk, xk, sign)
         col = (L[:, k] + sign * sk * x) / c
         col = jnp.where(rowpos > k, col, L[:, k]).at[k].set(r)
         L = jnp.where(cidx == k, col[:, None], L)

@@ -39,6 +39,31 @@ Mapping to paper Sec. 3.1, per slot:
                         slots, flattening the p99 latency spike.  C=1 is
                         bit-for-bit the global round.
 
+                   -> sample retirement (``retirement=``): the paper's
+                      grow-only (A, B) anchors a slot to every sample it
+                      ever saw; a drifting sensor needs the opposite.  Two
+                      policies retire old samples *inside the same fused
+                      step* (no extra dispatches):
+
+                      * ``'forget'`` - exponentially-weighted RLS: every
+                        accumulated sample scales (A, B) by lambda and the
+                        live factor by sqrt(lambda) before its fold
+                        (exact: scaling commutes with the rank-1
+                        rotation).  lambda=1 is bit-for-bit the
+                        non-retiring path.
+                      * ``'window'`` - a per-slot ring buffer
+                        (``core.types.WindowState``) of the last
+                        ``retire_window`` retained (r~, onehot) rows; on
+                        overwrite the evicted row is subtracted from
+                        (A, B) and hyperbolically downdated out of the
+                        live factor (``cholupdate_* sign=-1``), with a
+                        numerical-safety guard that re-factorizes
+                        B + beta I for any slot whose downdate would
+                        drive a diagonal non-positive.  A capacity >=
+                        the stream length is bit-for-bit the
+                        non-retiring path (empty ring rows evict as
+                        exact no-ops).
+
 The scaling idea is the same one the token server uses for LM decode
 (``repro.runtime.server``), with the shared slot scheduler
 (``repro.runtime.scheduler.SlotScheduler``): a fixed number of slots, each
@@ -67,7 +92,7 @@ from repro.core.online import (
     online_serve_step,
     refresh_output_batched,
 )
-from repro.core.types import Array, DFRConfig
+from repro.core.types import Array, DFRConfig, WindowState
 from repro.kernels import ops
 from repro.runtime.scheduler import RefreshCohorts, SlotScheduler
 
@@ -106,7 +131,58 @@ def _bcast_to(mask1d: Array, leaf: Array) -> Array:
     return mask1d.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
 
-@partial(jax.jit, static_argnames=("cfg", "fused_infer", "maintain_factor"))
+def _retire_window_slot(
+    U: Array,        # (s, s) transposed live factor
+    A: Array,        # (Ny, s)
+    B: Array,        # (s, s)
+    count: Array,    # scalar int32 retained-sample count
+    win: WindowState,  # single-slot ring buffer
+    new_rows: Array,   # (W, s) gated r~ rows folded into (A, B) this step
+    new_oh: Array,     # (W, Ny) matching label one-hots
+    lv: Array,         # (W,) f32 0/1: row actually accumulated this step
+) -> Tuple[Array, Array, Array, Array, WindowState, Array]:
+    """Sequential sliding-window eviction for one slot (vmapped over S).
+
+    Per accumulated row: the ring slot about to be overwritten is evicted -
+    subtracted from (A, B), hyperbolically downdated out of the factor
+    (guarded) - then the new row takes its place and the cursor advances.
+    Dead rows (lv=0) touch nothing: the evicted row is zero-gated, the
+    write and cursor advance are skipped, so tail windows and dead slots
+    are exact no-ops.  Returns (U, A, B, count, win, bad): ``bad`` flags a
+    guard-skipped downdate - the caller must re-factorize that slot from
+    ``B + beta I`` (the factor is finite but stale).
+    """
+    cap = win.rows.shape[0]
+
+    def fold(t, carry):
+        U, A, B, count, rows, ohbuf, pos, bad = carry
+        l = lv[t]
+        ev_r = rows[pos] * l
+        ev_o = ohbuf[pos] * l
+        # every real r~ row ends in the constant-1 feature, so a nonzero
+        # tail marks a genuine eviction (vs. never-written ring capacity)
+        valid = ev_r[-1] > 0.5
+        A = A - ev_o[:, None] * ev_r[None, :]
+        B = B - jnp.outer(ev_r, ev_r)
+        U, ok = ridge.cholupdate_dense_t_guarded(U, ev_r, -1.0)
+        bad = bad | ~ok
+        count = count - valid.astype(count.dtype)
+        write = l > 0
+        rows = rows.at[pos].set(jnp.where(write, new_rows[t], rows[pos]))
+        ohbuf = ohbuf.at[pos].set(jnp.where(write, new_oh[t], ohbuf[pos]))
+        pos = jnp.where(write, (pos + 1) % cap, pos)
+        return U, A, B, count, rows, ohbuf, pos, bad
+
+    U, A, B, count, rows, ohbuf, pos, bad = jax.lax.fori_loop(
+        0, new_rows.shape[0], fold,
+        (U, A, B, count, win.rows, win.onehot, win.pos,
+         jnp.zeros((), jnp.bool_)),
+    )
+    return U, A, B, count, WindowState(rows=rows, onehot=ohbuf, pos=pos), bad
+
+
+@partial(jax.jit, static_argnames=(
+    "cfg", "fused_infer", "maintain_factor", "retirement"))
 def _stream_step(
     cfg: DFRConfig,
     mask: Array,
@@ -120,9 +196,13 @@ def _stream_step(
     live: Array,           # (S,) bool live-slot mask
     lr: Array,             # scalar base learning rate
     phase_steps: Array,    # scalar int32: slot steps of reservoir adaptation
+    beta: Array,           # scalar ridge beta (window-guard refactorization)
+    forget: Array,         # scalar lambda (used when retirement='forget')
+    win: Optional[WindowState],  # slot-axis ring buffers (window mode)
     fused_infer: bool = True,
     maintain_factor: bool = False,
-) -> Tuple[OnlineState, Array, Dict[str, Array]]:
+    retirement: str = "none",
+) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
     """One server step: infer-before-update + train for every live slot.
 
     Returns (new states, predictions (S, W), per-slot metrics).  Dead slots
@@ -138,6 +218,15 @@ def _stream_step(
     the statistics only accumulate in the frozen phase, the phase-boundary
     ``reset_statistics`` of the single-stream protocol is a no-op here
     (phase-1 stats are never written in the first place).
+
+    ``retirement`` (static) compiles in the sample-retirement policy (see
+    the module docstring): ``'forget'`` threads the lambda decay through
+    the vmapped serve step and the deferred factor fold; ``'window'`` runs
+    the per-slot ring-buffer eviction (``_retire_window_slot``) after the
+    deferred update fold, then - only when some slot's downdate hit the
+    numerical guard - re-factorizes exactly those slots' live factors from
+    their retained ``B + beta I`` (one cond-gated batched Cholesky, never
+    executed on the clean steady-state path).
     """
     f = cfg.f()
 
@@ -153,6 +242,19 @@ def _stream_step(
         )
 
     states = jax.lax.cond(jnp.any(fresh_mask), _admit, lambda st: st, states)
+    if retirement == "window":
+        # admitted slots also restart their ring buffer (same cond gating)
+        win = jax.lax.cond(
+            jnp.any(fresh_mask),
+            lambda w: jax.tree_util.tree_map(
+                lambda leaf: jnp.where(
+                    _bcast_to(fresh_mask, leaf), jnp.zeros_like(leaf), leaf
+                ),
+                w,
+            ),
+            lambda w: w,
+            win,
+        )
 
     # per-slot learning-rate phase: adapt (p, q, W, b) while the slot is
     # young, then freeze the reservoir for consistent Ridge features; the
@@ -169,6 +271,7 @@ def _stream_step(
             # forcing XLA to copy the (S, s, s) buffer per rotation instead
             # of updating it in place (see online_serve_step docstring)
             maintain_factor="defer" if maintain_factor else False,
+            forget=forget if retirement == "forget" else None,
         )
     )(states, u, length, label, weight, lr_slot, acc_slot)
 
@@ -201,12 +304,52 @@ def _stream_step(
         # (the rows are exactly the gated r~ rows accumulated into B above:
         # dead/tail/adaptation-phase rows are zero, hence exact no-ops)
         rt_rows = metrics.pop("rt_rows")
-        Lt = jax.vmap(ridge.cholupdate_window_t)(new_states.ridge.Lt, rt_rows)
+        if retirement == "forget":
+            scales = metrics.pop("fold_scale")
+            Lt = jax.vmap(ridge.cholupdate_window_t_decay)(
+                new_states.ridge.Lt, rt_rows, scales
+            )
+        else:
+            Lt = jax.vmap(ridge.cholupdate_window_t)(
+                new_states.ridge.Lt, rt_rows
+            )
         new_states = dataclasses.replace(
             new_states,
             ridge=dataclasses.replace(new_states.ridge, Lt=Lt),
         )
-    return new_states, preds, metrics
+        if retirement == "window":
+            # retire the oldest retained sample per accumulated row: evict
+            # from (A, B), downdate out of the live factor, refill the ring
+            gate = weight * acc_slot[:, None]            # (S, W) 0/1
+            oh_rows = jax.nn.one_hot(label, cfg.n_classes, dtype=cfg.dtype)
+            Lt, A, B, count, win, bad = jax.vmap(_retire_window_slot)(
+                new_states.ridge.Lt, new_states.ridge.A, new_states.ridge.B,
+                new_states.ridge.count, win, rt_rows, oh_rows, gate,
+            )
+            # guard fallback: a clamp-skipped downdate left that slot's
+            # factor stale - rebuild it from the retained B + beta I.  The
+            # batched factorization is cond-gated on ANY slot flagging, so
+            # the clean path (every realistic step) never pays it.
+            Lt = jax.lax.cond(
+                jnp.any(bad),
+                lambda args: jnp.where(
+                    bad[:, None, None],
+                    jnp.swapaxes(
+                        jnp.linalg.cholesky(ridge.regularize(args[1], beta)),
+                        -1, -2,
+                    ),
+                    args[0],
+                ),
+                lambda args: args[0],
+                (Lt, B),
+            )
+            new_states = dataclasses.replace(
+                new_states,
+                ridge=dataclasses.replace(
+                    new_states.ridge, Lt=Lt, A=A, B=B, count=count
+                ),
+            )
+    return new_states, win, preds, metrics
 
 
 @jax.jit
@@ -300,6 +443,21 @@ class StreamServer:
     factor, O(s^2) solves); ``refresh_cohorts`` staggers the round over
     round-robin slot cohorts with identical per-slot cadence.  The defaults
     reproduce the PR-2 global-recompute behavior exactly.
+
+    Retirement policy (drift adaptation, see the module docstring):
+
+      * ``retirement='none'``   - grow-only statistics (the default; the
+        PR-3 behavior, bit-for-bit).
+      * ``retirement='forget'`` - forgetting factor ``forget`` = lambda in
+        (0, 1]: per-sample exponential decay of (A, B, Lt).  The
+        equivalence contract: lambda=1 serves bit-for-bit the
+        ``retirement='none'`` episode.
+      * ``retirement='window'`` - sliding window of the last
+        ``retire_window`` retained samples per slot (ring-buffer eviction
+        + guarded hyperbolic downdate of the live factor); requires
+        ``refresh_mode='incremental'`` (the downdate needs the live
+        factor).  The equivalence contract: a capacity >= the stream
+        length serves bit-for-bit the ``retirement='none'`` episode.
     """
 
     def __init__(
@@ -316,9 +474,27 @@ class StreamServer:
         fused_infer: Optional[bool] = None,
         refresh_mode: str = "recompute",
         refresh_cohorts: int = 1,
+        retirement: str = "none",
+        forget: float = 1.0,
+        retire_window: int = 0,
     ):
         if refresh_mode not in ("recompute", "incremental"):
             raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
+        if retirement not in ("none", "forget", "window"):
+            raise ValueError(f"unknown retirement: {retirement!r}")
+        if retirement == "forget" and not 0.0 < forget <= 1.0:
+            raise ValueError(f"forget must be in (0, 1], got {forget!r}")
+        if retirement == "window":
+            if refresh_mode != "incremental":
+                raise ValueError(
+                    "retirement='window' needs refresh_mode='incremental' "
+                    "(the eviction downdates a live factor)"
+                )
+            if retire_window < 1:
+                raise ValueError(
+                    f"retirement='window' needs retire_window >= 1, got "
+                    f"{retire_window!r}"
+                )
         self.cfg = cfg
         self.t_max = int(t_max)
         self.max_streams = int(max_streams)
@@ -328,6 +504,9 @@ class StreamServer:
         self.refresh_every = int(refresh_every)
         self.beta = jnp.asarray(beta, cfg.dtype)
         self.refresh_mode = refresh_mode
+        self.retirement = retirement
+        self.forget = jnp.asarray(forget, cfg.dtype)
+        self.retire_window = int(retire_window)
         self.cohorts = RefreshCohorts(
             self.max_streams, self.refresh_every, refresh_cohorts
         )
@@ -356,6 +535,17 @@ class StreamServer:
             ).copy(),
             single,
         )
+        # sliding-window mode: per-slot ring buffers of retained samples
+        self.win: Optional[WindowState] = None
+        if retirement == "window":
+            self.win = jax.tree_util.tree_map(
+                lambda leaf: jnp.broadcast_to(
+                    leaf, (self.max_streams, *leaf.shape)
+                ).copy(),
+                WindowState.zeros(
+                    self.retire_window, cfg.s, cfg.n_classes, cfg.dtype
+                ),
+            )
         self._admitted_this_step: List[int] = []
         self.global_step = 0
         self.step_times_s: List[float] = []   # per-step wall time (latency)
@@ -405,13 +595,15 @@ class StreamServer:
             live[i] = True
 
         t0 = time.perf_counter()
-        self.states, preds, _ = _stream_step(
+        self.states, self.win, preds, _ = _stream_step(
             self.cfg, self.mask, self.states, self._fresh_row,
             jnp.asarray(fresh_mask),
             jnp.asarray(u), jnp.asarray(length), jnp.asarray(label),
             jnp.asarray(weight), jnp.asarray(live), self.lr,
-            self.phase_steps, fused_infer=self.fused_infer,
+            self.phase_steps, self.beta, self.forget, self.win,
+            fused_infer=self.fused_infer,
             maintain_factor=(self.refresh_mode == "incremental"),
+            retirement=self.retirement,
         )
         self.global_step += 1
         due = self.cohorts.due_slots(self.global_step)

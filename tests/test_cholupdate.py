@@ -9,7 +9,14 @@ kernel in repro.kernels.cholupdate):
   * all forms agree to per-dtype tolerances: packed numpy oracle ==
     packed jitted == dense == batched vmap == Pallas (interpret mode),
   * a refresh from a maintained factor equals the full O(s^3) re-solve,
-  * the serve-step maintenance invariant  L L^T == B + beta I  holds.
+  * the serve-step maintenance invariant  L L^T == B + beta I  holds,
+  * *interleaved histories*: random sequences of updates, downdates and
+    sqrt(lambda) forgetting scalings keep  L L^T == B_live  (the decayed
+    sample sum plus the decayed beta prior) within tolerance, in both the
+    f64 packed oracle and the f32 transposed in-state form,
+  * the downdate guard: an indefinite downdate raises in the numpy oracle
+    and clamp-skips with an ``ok=False`` flag (finite, positive-diagonal
+    factor) in the jax forms - never NaNs.
 
 Randomized sweeps are hypothesis-driven (the CI property lane installs it);
 without hypothesis the same checks run on a small deterministic seed grid,
@@ -167,6 +174,107 @@ def check_refresh_from_factor_matches_full(s, seed, scale, beta, ny=3, n_upd=6):
         np.asarray(W_tb), np.asarray(W_full), rtol=2e-3, atol=2e-3 * scale_w)
 
 
+def check_interleaved_history(s, seed, n_ops, scale, beta, lam):
+    """Random update / downdate / sqrt(lambda)-scaling sequences preserve
+    the live-factor invariant  L L^T == B_live  (B_live tracks the decayed
+    sample sum *including* the decayed beta prior - the forgetting-factor
+    semantics of ``online_serve_step``).
+
+    Downdates only ever remove a row currently in the system (decayed in
+    lockstep with it), as the sliding-window retirement does; a removal
+    that would leave the f32 form too close to indefinite is deterministic-
+    ally re-drawn as an update instead (the guard path has its own test).
+    """
+    rng = np.random.default_rng(seed)
+    B_ref = beta * np.eye(s)                      # f64 live reference
+    P = np.asarray(ridge.pack_lower(np.sqrt(beta) * np.eye(s)))  # oracle
+    U32 = jnp.asarray(np.sqrt(beta) * np.eye(s), jnp.float32)    # in-state
+    stored = []
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 3))
+        if op == 1:
+            if not stored:
+                op = 0
+            else:
+                x = stored.pop(int(rng.integers(0, len(stored))))
+                # keep the f32 form clear of the downdate guard: only
+                # remove rows whose relative mass leaves margin (< 0.9)
+                if float(x @ np.linalg.solve(B_ref, x)) > 0.81:
+                    stored.append(x)
+                    op = 0
+        if op == 0:                               # update with a fresh row
+            x = rng.normal(size=s) * scale
+            P = ridge.cholupdate_packed_numpy(P, x, s, 1.0)
+            U32, ok = ridge.cholupdate_dense_t_guarded(
+                U32, jnp.asarray(x, jnp.float32), 1.0)
+            assert bool(ok)
+            B_ref = B_ref + np.outer(x, x)
+            stored.append(x)
+        elif op == 1:                             # downdate the popped row
+            P = ridge.cholupdate_packed_numpy(P, x, s, -1.0)
+            U32, ok = ridge.cholupdate_dense_t_guarded(
+                U32, jnp.asarray(x, jnp.float32), -1.0)
+            assert bool(ok)
+            B_ref = B_ref - np.outer(x, x)
+        else:                                     # forgetting scaling
+            root = np.sqrt(lam)
+            P = P * root
+            U32 = U32 * jnp.asarray(root, jnp.float32)
+            B_ref = B_ref * lam
+            stored = [v * root for v in stored]
+
+    L = np.zeros((s, s))          # unpack in f64 (jnp would downcast)
+    L[np.tril_indices(s)] = P
+    mag = max(1.0, float(np.abs(B_ref).max()))
+    np.testing.assert_allclose(L @ L.T, B_ref, rtol=1e-8, atol=1e-8 * mag)
+    U = np.asarray(U32)
+    np.testing.assert_allclose(U.T @ U, B_ref, rtol=3e-3, atol=3e-3 * mag)
+    # the factor stayed triangular with a strictly positive diagonal (SPD)
+    assert np.all(np.diag(U) > 0)
+    assert np.all(np.isfinite(U))
+
+
+def check_downdate_guard(s, seed, scale, beta):
+    """An indefinite downdate (x^T B^{-1} x > 1) raises in the numpy
+    oracle and clamp-skips with ok=False in every jax form - the factor
+    stays finite, triangular, positive-diagonal; no NaNs anywhere."""
+    rng = np.random.default_rng(seed)
+    B, L = _spd(rng, s, scale, beta)
+    x = _safe_downdate_vector(B, rng.normal(size=s) * scale, margin=1.05)
+
+    with pytest.raises(np.linalg.LinAlgError):
+        ridge.cholupdate_packed_numpy(
+            np.asarray(ridge.pack_lower(L)), x, s, -1.0)
+
+    L32 = jnp.asarray(L, jnp.float32)
+    x32 = jnp.asarray(x, jnp.float32)
+    got, ok = ridge.cholupdate_dense_guarded(L32, x32, -1.0)
+    assert not bool(ok)
+    got = np.asarray(got)
+    assert np.all(np.isfinite(got))
+    assert np.all(np.diag(got) > 0)
+    # the unflagged dense form clamps identically (documented, not NaN)
+    np.testing.assert_array_equal(
+        np.asarray(ridge.cholupdate_dense(L32, x32, -1.0)), got)
+    # transposed in-state form: same clamp, transposed bit-for-bit
+    got_t, ok_t = ridge.cholupdate_dense_t_guarded(L32.T, x32, -1.0)
+    assert not bool(ok_t)
+    np.testing.assert_array_equal(np.asarray(got_t).T, got)
+    # packed jitted form clamps to the same finite factor
+    packed = ridge.cholupdate_packed_jax(
+        jnp.asarray(ridge.pack_lower(L), jnp.float32), x32, s, -1.0)
+    np.testing.assert_array_equal(
+        np.asarray(ridge.unpack_lower(packed, s)), np.tril(got))
+    # Pallas tile kernel (interpret): same guard, bit-parity with the
+    # jnp window sweep, both signs dispatched through one kernel
+    win = ops.cholupdate_window(
+        L32, x32[None, :], sign=-1.0, backend="interpret")
+    np.testing.assert_array_equal(
+        np.asarray(win),
+        np.asarray(ridge.cholupdate_window(L32, x32[None, :], -1.0)))
+    assert np.all(np.isfinite(np.asarray(win)))
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis sweeps
 # ---------------------------------------------------------------------------
@@ -201,6 +309,21 @@ if HAVE_HYPOTHESIS:
     def test_refresh_from_factor_matches_full(s, seed, scale, beta):
         check_refresh_from_factor_matches_full(s, seed, scale, beta)
 
+    @needs_hypothesis
+    @given(s=st.integers(3, 16), seed=st.integers(0, 10_000),
+           n_ops=st.integers(4, 16), scale=st.floats(0.3, 2.0),
+           beta=st.floats(1e-2, 1.0), lam=st.floats(0.7, 1.0))
+    @settings(**SETTINGS)
+    def test_interleaved_history(s, seed, n_ops, scale, beta, lam):
+        check_interleaved_history(s, seed, n_ops, scale, beta, lam)
+
+    @needs_hypothesis
+    @given(s=st.integers(3, 16), seed=st.integers(0, 10_000),
+           scale=st.floats(0.3, 2.0), beta=st.floats(1e-2, 1.0))
+    @settings(max_examples=10, deadline=None)  # includes a Pallas interpret run
+    def test_downdate_guard(s, seed, scale, beta):
+        check_downdate_guard(s, seed, scale, beta)
+
 
 # ---------------------------------------------------------------------------
 # Deterministic grid (runs with or without hypothesis)
@@ -227,6 +350,92 @@ def test_all_forms_agree_grid(s, seed, scale, beta):
 @pytest.mark.parametrize("s,seed,scale,beta", GRID)
 def test_refresh_from_factor_matches_full_grid(s, seed, scale, beta):
     check_refresh_from_factor_matches_full(s, seed, scale, beta)
+
+
+INTERLEAVED_GRID = [
+    (5, 0, 12, 1.0, 1e-2, 0.9), (9, 1, 16, 0.5, 1e-1, 0.75),
+    (13, 2, 10, 2.0, 1.0, 1.0), (7, 3, 16, 0.8, 5e-2, 0.95),
+]
+
+
+@pytest.mark.parametrize("s,seed,n_ops,scale,beta,lam", INTERLEAVED_GRID)
+def test_interleaved_history_grid(s, seed, n_ops, scale, beta, lam):
+    check_interleaved_history(s, seed, n_ops, scale, beta, lam)
+
+
+@pytest.mark.parametrize("s,seed,scale,beta", GRID)
+def test_downdate_guard_grid(s, seed, scale, beta):
+    check_downdate_guard(s, seed, scale, beta)
+
+
+def test_window_decay_fold_matches_sequential_and_ones_is_identity():
+    """``cholupdate_window_t_decay``: per-row factor pre-scaling equals the
+    explicit scale-then-rotate sequence; an all-ones scale vector is
+    bit-for-bit ``cholupdate_window_t`` (the lambda=1 contract)."""
+    rng = np.random.default_rng(11)
+    s = 13
+    _, L = _spd(rng, s, 1.0, 0.1)
+    U = jnp.asarray(L.T, jnp.float32)
+    X = jnp.asarray(rng.normal(size=(4, s)).astype(np.float32) * 0.5)
+    X = X.at[1].set(0.0)  # a gated row: its scale must be 1.0 (no decay)
+    scales = jnp.asarray([0.95, 1.0, 0.9, 0.95], jnp.float32) ** 0.5
+
+    got = ridge.cholupdate_window_t_decay(U, X, scales)
+    want = U
+    for t in range(4):
+        want = ridge.cholupdate_dense_t(want * scales[t], X[t], 1.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    ones = jnp.ones((4,), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ridge.cholupdate_window_t_decay(U, X, ones)),
+        np.asarray(ridge.cholupdate_window_t(U, X)))
+
+
+def test_soft_reset_scales_statistics_consistently():
+    """``reset_statistics(forget=lam)`` scales (A, B, Lt, factor_beta) in
+    lockstep: the live-factor invariant survives, and lam=1.0 is the exact
+    identity."""
+    cfg = DFRConfig(n_in=2, n_classes=3, n_nodes=5)
+    from repro.core import masking
+
+    mask = masking.make_mask(jax.random.PRNGKey(cfg.mask_seed), cfg.n_nodes,
+                             cfg.n_in, cfg.dtype)
+    beta = 0.1
+    state = online.init_state(cfg, factor_beta=beta)
+    rng = np.random.default_rng(5)
+    u = jnp.asarray(rng.normal(size=(4, 8, 2)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(3, 9, 4), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, 3, 4), jnp.int32)
+    w = jnp.ones((4,), jnp.float32)
+    state, _, _ = online.online_serve_step(
+        cfg, mask, state, u, ln, lab, jnp.float32(0.1), w,
+        jnp.float32(1.0), maintain_factor=True)
+
+    lam = 0.8
+    soft = online.reset_statistics(state, forget=lam)
+    np.testing.assert_allclose(np.asarray(soft.ridge.A),
+                               lam * np.asarray(state.ridge.A), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(soft.ridge.B),
+                               lam * np.asarray(state.ridge.B), rtol=1e-6)
+    lhs = np.asarray(soft.ridge.Lt.T @ soft.ridge.Lt)
+    rhs = np.asarray(soft.ridge.B) + float(soft.ridge.factor_beta) * np.eye(cfg.s)
+    np.testing.assert_allclose(lhs, rhs, rtol=5e-4,
+                               atol=5e-4 * max(1.0, np.abs(rhs).max()))
+    assert float(soft.ridge.factor_beta) == pytest.approx(lam * beta)
+    assert int(soft.ridge.count) == int(state.ridge.count)
+
+    ident = online.reset_statistics(state, forget=1.0)
+    for a, b in zip(jax.tree_util.tree_leaves(ident),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # misuse is loud: lambda outside (0, 1] would NaN the next maintained
+    # fold (zeroed factor diagonal), and the hard/soft resets are exclusive
+    with pytest.raises(ValueError):
+        online.reset_statistics(state, forget=0.0)
+    with pytest.raises(ValueError):
+        online.reset_statistics(state, factor_beta=beta, forget=0.9)
 
 
 def test_window_equals_sequential_singles_and_zero_rows_noop():

@@ -1,0 +1,106 @@
+"""Data fixtures: the drifting (piecewise-stationary) NARMA stream.
+
+Contract under test (``repro.data.make_narma10_drift`` /
+``narma_series_coeffs`` / ``quantize_targets``):
+
+  * deterministic per seed, shapes match the ``RegressionBatch`` layout,
+  * stationary coefficients reproduce ``narma10_series`` exactly,
+  * the switch-point metadata is sharp: every target before
+    ``switch_sample`` is identical to the undrifted stream, the switch
+    sample's target is the first produced under the drifted coefficients,
+    and the exogenous input never changes,
+  * unstable coefficient choices raise instead of returning NaNs,
+  * ``quantize_targets`` is deterministic and respects provided edges.
+"""
+import numpy as np
+import pytest
+
+from repro.data import (
+    NARMA_COEFFS,
+    make_narma10_drift,
+    narma10_series,
+    narma_series_coeffs,
+    quantize_targets,
+)
+
+
+def test_drift_fixture_shapes_and_determinism():
+    b, info = make_narma10_drift(n_samples=90, t_len=12, seed=7)
+    assert b.u.shape == (90, 12, 1)
+    assert b.length.shape == (90,)
+    assert b.y.shape == (90, 1)
+    assert b.u.dtype == np.float32 and b.y.dtype == np.float32
+    assert np.all(np.asarray(b.length) == 12)
+
+    b2, info2 = make_narma10_drift(n_samples=90, t_len=12, seed=7)
+    np.testing.assert_array_equal(np.asarray(b.u), np.asarray(b2.u))
+    np.testing.assert_array_equal(np.asarray(b.y), np.asarray(b2.y))
+    assert info == info2
+
+    b3, _ = make_narma10_drift(n_samples=90, t_len=12, seed=8)
+    assert not np.array_equal(np.asarray(b.y), np.asarray(b3.y))
+
+
+def test_stationary_coeffs_reproduce_narma10_series():
+    u1, y1 = narma10_series(300, seed=3)
+    u2, y2 = narma_series_coeffs(300, seed=3)
+    np.testing.assert_array_equal(u1, u2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_switch_point_metadata_is_sharp():
+    """Targets match the undrifted stream exactly up to switch_sample and
+    diverge exactly there; the exogenous input is regime-independent."""
+    kw = dict(n_samples=80, t_len=16, seed=11, switch_frac=0.4)
+    drift, info = make_narma10_drift(**kw)
+    flat, _ = make_narma10_drift(coeffs_b=NARMA_COEFFS, **kw)
+
+    sw = info["switch_sample"]
+    assert sw == 32
+    assert info["switch_step"] == 10 + sw + 16 - 1  # order + sw + t_len - 1
+    assert info["coeffs_a"] == NARMA_COEFFS
+    y_d = np.asarray(drift.y).ravel()
+    y_f = np.asarray(flat.y).ravel()
+    np.testing.assert_array_equal(y_d[:sw], y_f[:sw])
+    assert y_d[sw] != y_f[sw]  # first target produced by the new regime
+    np.testing.assert_array_equal(np.asarray(drift.u), np.asarray(flat.u))
+
+
+def test_switch_frac_validation_and_divergence_guard():
+    with pytest.raises(ValueError):
+        make_narma10_drift(n_samples=40, switch_frac=0.0)
+    with pytest.raises(ValueError):
+        make_narma10_drift(n_samples=40, switch_frac=1.0)
+    # wildly unstable regime-B coefficients must raise, not emit NaNs
+    with pytest.raises(ValueError):
+        make_narma10_drift(n_samples=60, t_len=16, seed=0,
+                           coeffs_b=(1.5, 1.0, 1.5, 1.0))
+
+
+def test_drift_segment_bounds_fit_or_raise():
+    from repro.data import drift_segment_bounds
+
+    pre, at, post = drift_segment_bounds(160, 80, 4)
+    assert pre == (48, 80) and at == (80, 96) and post == (128, 160)
+    with pytest.raises(ValueError):  # switch too early: pre would wrap
+        drift_segment_bounds(160, 16, 4)
+    with pytest.raises(ValueError):  # switch too late: at overruns the end
+        drift_segment_bounds(160, 150, 4)
+
+
+def test_quantize_targets_edges_and_determinism():
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=500)
+    lab, edges = quantize_targets(y, 4)
+    assert lab.dtype == np.int32 and edges.shape == (3,)
+    assert set(np.unique(lab)) == {0, 1, 2, 3}
+    # equal-mass quantile bins on the defining sample
+    counts = np.bincount(lab, minlength=4)
+    assert counts.max() - counts.min() <= 2
+    # provided edges are respected verbatim (labels from a shifted segment
+    # land in the top bins - how the drift bench makes the shift visible)
+    lab_hi, edges2 = quantize_targets(y + 10.0, 4, edges)
+    np.testing.assert_array_equal(edges, edges2)
+    assert np.all(lab_hi == 3)
+    lab_rep, _ = quantize_targets(y, 4, edges)
+    np.testing.assert_array_equal(lab, lab_rep)

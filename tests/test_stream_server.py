@@ -186,6 +186,129 @@ def test_incremental_refresh_matches_recompute_over_episode():
         assert float(r_inc.final_state.ridge.factor_beta) > 0
 
 
+# ---------------------------------------------------------------------------
+# Retirement policies: forgetting factor and sliding window
+# ---------------------------------------------------------------------------
+
+
+def _assert_states_bitwise_equal(sa, sb):
+    for a, b in zip(jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forget_lambda1_is_bitwise_the_incremental_path():
+    """retirement='forget' at lambda=1 serves a full episode bit-for-bit
+    identically to the PR-3 incremental path: every scaling is a multiply
+    by exactly 1.0 (the documented equivalence contract)."""
+    preds_inc, srv_inc = _serve_collect(_episode_streams(),
+                                        refresh_mode="incremental")
+    preds_f, srv_f = _serve_collect(_episode_streams(),
+                                    refresh_mode="incremental",
+                                    retirement="forget", forget=1.0)
+    assert preds_inc == preds_f
+    _assert_states_bitwise_equal(srv_inc.states, srv_f.states)
+    for a, b in zip(sorted(srv_inc.completed, key=lambda r: r.rid),
+                    sorted(srv_f.completed, key=lambda r: r.rid)):
+        _assert_states_bitwise_equal(a.final_state, b.final_state)
+
+
+def test_window_capacity_geq_stream_is_bitwise_the_incremental_path():
+    """retirement='window' with capacity >= every stream length serves a
+    full episode bit-for-bit identically to the PR-3 incremental path:
+    the ring never wraps, so every eviction is of a zero row - an exact
+    no-op in (A, B) and in the factor downdate."""
+    preds_inc, srv_inc = _serve_collect(_episode_streams(),
+                                        refresh_mode="incremental")
+    preds_w, srv_w = _serve_collect(_episode_streams(),
+                                    refresh_mode="incremental",
+                                    retirement="window", retire_window=16)
+    assert preds_inc == preds_w
+    _assert_states_bitwise_equal(srv_inc.states, srv_w.states)
+
+
+def test_window_matches_from_scratch_ridge_on_last_w_samples():
+    """After serving with retirement='window', a slot's (A, B, Lt) are the
+    statistics of exactly the last W retained (frozen-phase) samples: they
+    match a from-scratch recomputation of those samples' r~ rows, and the
+    factor refresh matches a from-scratch ridge fit on them (fp32 tol)."""
+    from repro.core import dprr, masking, reservoir, ridge
+
+    n, window, phase_steps, cap = 24, 2, 3, 8
+    beta = 1e-2
+    req = _make_stream(0, n, seed=9)
+    srv = StreamServer(CFG, t_max=16, max_streams=1, window=window,
+                       phase_steps=phase_steps, refresh_every=4, beta=beta,
+                       refresh_mode="incremental",
+                       retirement="window", retire_window=cap)
+    srv.submit(req)
+    done = srv.run_until_drained()
+    st = done[0].final_state
+    assert int(st.ridge.count) == cap
+
+    # the last `cap` accumulated samples (phase-2 only; lr=0 there so the
+    # final (p, q) are exactly the ones that produced every retained row)
+    acc_lo = phase_steps * window
+    retained = np.arange(n)[acc_lo:][-cap:]
+    u = jnp.asarray(req.u[retained])
+    ln = jnp.asarray(req.length[retained])
+    lab = jnp.asarray(req.label[retained])
+    j_seq = masking.apply_mask(srv.mask, u)
+    x = reservoir.run_reservoir(st.params.p, st.params.q, j_seq,
+                                f=CFG.f(), lengths=ln)
+    rt = np.asarray(dprr.r_tilde(dprr.compute_dprr(x, lengths=ln)))
+    onehot = np.eye(CFG.n_classes, dtype=np.float32)[np.asarray(lab)]
+    A_ref = onehot.T @ rt
+    B_ref = rt.T @ rt
+
+    tolA = dict(rtol=2e-3, atol=2e-3 * max(1.0, np.abs(A_ref).max()))
+    np.testing.assert_allclose(np.asarray(st.ridge.A), A_ref, **tolA)
+    tolB = dict(rtol=2e-3, atol=2e-3 * max(1.0, np.abs(B_ref).max()))
+    np.testing.assert_allclose(np.asarray(st.ridge.B), B_ref, **tolB)
+
+    W_win = np.asarray(ridge.ridge_solve_from_factor_t(st.ridge.A, st.ridge.Lt))
+    W_ref = np.asarray(ridge.ridge_cholesky_blocked(
+        jnp.asarray(A_ref), jnp.asarray(B_ref + beta * np.eye(CFG.s))))
+    np.testing.assert_allclose(
+        W_win, W_ref, rtol=5e-3, atol=5e-3 * max(1.0, np.abs(W_ref).max()))
+
+
+def test_window_guard_refactorizes_on_indefinite_eviction():
+    """An eviction downdate that would break the live factor (engineered
+    by shrinking one slot's factor mid-episode so the retained rows carry
+    more mass than it does) trips the numerical guard: the slot's factor
+    is rebuilt from its retained B + beta I inside the same step, the
+    state stays finite and SPD, and the stream still completes."""
+    import dataclasses
+
+    n, window, cap = 24, 2, 6
+    beta = 1e-2
+    req = _make_stream(0, n, seed=4)
+    srv = StreamServer(CFG, t_max=16, max_streams=1, window=window,
+                       phase_steps=2, refresh_every=4, beta=beta,
+                       refresh_mode="incremental",
+                       retirement="window", retire_window=cap)
+    srv.submit(req)
+    # run until the ring is full and evictions are real
+    while srv.slot_pos[0] < (2 + cap // window + 2) * window:
+        srv.step()
+    # corrupt the live factor (NOT the statistics): a tiny factor makes the
+    # next eviction's downdate indefinite w.r.t. it
+    shrunk = srv.states.ridge.Lt * 0.05
+    srv.states = dataclasses.replace(
+        srv.states, ridge=dataclasses.replace(srv.states.ridge, Lt=shrunk))
+    srv.run_until_drained()
+
+    st = srv.sched.completed[0].final_state
+    Lt = np.asarray(st.ridge.Lt)
+    assert np.all(np.isfinite(Lt))
+    assert np.all(np.diag(Lt) > 0)
+    # the guard refactorized from (B + beta I): the invariant holds again
+    rhs = np.asarray(st.ridge.B) + beta * np.eye(CFG.s)
+    np.testing.assert_allclose(Lt.T @ Lt, rhs, rtol=5e-4,
+                               atol=5e-4 * max(1.0, np.abs(rhs).max()))
+    assert len(srv.sched.completed[0].preds) == n
+
+
 def test_staggered_refresh_serves_every_stream_correctly():
     """C>1 staggering (both modes) still serves every sample of every
     stream; per-slot refresh cadence changes only latency, not coverage."""
