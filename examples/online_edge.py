@@ -60,6 +60,14 @@ def _server_retirement_kw(args) -> dict:
     return {"refresh_mode": args.refresh_mode}
 
 
+def _server_pipeline_kw(args) -> dict:
+    """Map the serving-pipeline flags to StreamServer kwargs (PR 5)."""
+    return {
+        "pipeline_depth": args.pipeline_depth,
+        "staging": "host" if args.host_staging else "device",
+    }
+
+
 def run_drift(args) -> None:
     """Serve drifting NARMA streams and report drift-recovery accuracy."""
     n = 64 if args.smoke else 160
@@ -75,7 +83,8 @@ def run_drift(args) -> None:
     server = StreamServer(
         cfg, t_max=t_len, max_streams=args.max_streams, window=args.window,
         phase_steps=3, refresh_every=2,
-        refresh_cohorts=args.refresh_cohorts, **kw,
+        refresh_cohorts=args.refresh_cohorts,
+        **_server_pipeline_kw(args), **kw,
     )
     policy = kw.get("retirement", "none")
     print(f"serving {len(streams)} drifting NARMA streams x {n} samples "
@@ -97,6 +106,10 @@ def run_drift(args) -> None:
           f"p99 {lat['p99_ms']:.1f} ms over {server.global_step} rounds "
           f"(p99 absorbs the one-time jit compile at these few rounds; "
           f"bench_stream reports warmed steady-state latency)")
+    if server.pipeline_depth > 0:
+        print(f"  pipeline depth {server.pipeline_depth}: dispatch p50 "
+              f"{lat['dispatch_p50_ms']:.1f} ms, drain (sync) p50 "
+              f"{lat['drain_p50_ms']:.1f} / p99 {lat['drain_p99_ms']:.1f} ms")
 
 
 def main():
@@ -128,6 +141,16 @@ def main():
                          "hyperbolic downdates (implies --refresh-mode "
                          "incremental; W >= stream length is exactly the "
                          "non-retiring path)")
+    ap.add_argument("--pipeline-depth", type=int, default=0, metavar="D",
+                    help="async serving pipeline depth: predictions ride a "
+                         "lag-D device ring while the host books step k "
+                         "during device compute of k+1..k+D (0 = fully "
+                         "synchronous; the served episode is bit-identical "
+                         "at every depth)")
+    ap.add_argument("--host-staging", action="store_true",
+                    help="use the PR-4 host-staged batch build instead of "
+                         "the device-resident request pool (A/B baseline; "
+                         "bit-identical, slower)")
     ap.add_argument("--drift", action="store_true",
                     help="serve piecewise-stationary NARMA streams and "
                          "report before/at/after-drift online accuracy")
@@ -165,7 +188,8 @@ def main():
     server = StreamServer(
         cfg, t_max=train.t_max, max_streams=args.max_streams,
         window=args.window, phase_steps=phase_steps, refresh_every=5,
-        refresh_cohorts=args.refresh_cohorts, **kw,
+        refresh_cohorts=args.refresh_cohorts,
+        **_server_pipeline_kw(args), **kw,
     )
     print(f"serving {len(streams)} streams x ~{len(splits[0])} samples "
           f"({args.max_streams} slots, windows of {args.window}); phase 1 "
@@ -185,6 +209,10 @@ def main():
     lat = server.latency_percentiles_ms()
     print(f"  window-round latency p50 {lat['p50_ms']:.1f} ms / "
           f"p99 {lat['p99_ms']:.1f} ms over {server.global_step} rounds")
+    if server.pipeline_depth > 0:
+        print(f"  pipeline depth {server.pipeline_depth}: dispatch p50 "
+              f"{lat['dispatch_p50_ms']:.1f} ms, drain (sync) p50 "
+              f"{lat['drain_p50_ms']:.1f} / p99 {lat['drain_p99_ms']:.1f} ms")
 
     # held-out evaluation with the best stream's retired model: refresh the
     # readout from its streamed statistics, then classify the test split

@@ -297,8 +297,13 @@ def clip_by_global_norm(grads: DFRParams, max_norm: float) -> DFRParams:
     two-scalar reservoir gradient (and vice versa)."""
 
     def _clip(leaves):
+        # norm accumulates in f32 for range, but the scale is applied in
+        # the grads' own dtype: a low-precision config (bf16) must not be
+        # silently promoted here - the f32 scale would infect the grads,
+        # then the params, then the reservoir scan carry
         gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
-        return jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        return scale.astype(leaves[0].dtype)
 
     s_res = _clip([grads.p, grads.q])
     s_out = _clip([grads.W, grads.b])

@@ -292,6 +292,7 @@ def online_serve_step(
     accumulate: Array,  # scalar 0/1: accumulate (A, B) this step?
     maintain_factor: "bool | str" = False,  # False | True | 'defer'
     forget: Optional[Array] = None,  # lambda in (0, 1]: decay per sample
+    train: bool = True,
 ) -> Tuple[OnlineState, Array, Dict[str, Array]]:
     """Fused infer-before-update + train step for the serving path.
 
@@ -355,6 +356,16 @@ def online_serve_step(
     exactly 1.0 for gated rows) for the caller's
     ``ridge.cholupdate_window_t_decay`` fold.
 
+    ``train`` (static) compiles in the truncated-BP machinery.  With
+    ``train=False`` no gradient or SGD math is compiled: the parameters
+    pass through untouched and the loss is evaluated as the same truncated
+    objective's primal (``backprop.truncated_loss_from_aux``).  This is
+    exactly the ``lr = 0`` step up to op scheduling: SGD with a zero
+    learning rate subtracts exactly 0 from every (finite-gradient, already
+    range-clamped) parameter, so the stream server cond-gates the whole
+    backward out of its steady state (every live slot frozen) without
+    changing the served episode.
+
     Returns (new state, logits (B, Ny), metrics).
     """
     f = cfg.f()
@@ -364,12 +375,18 @@ def online_serve_step(
 
     w = weight.astype(cfg.dtype)
     loss_fn = lambda lg, oh: w * backprop.loss_from_logits(lg, oh)  # noqa: E731
-    loss, g = backprop.grads_truncated_from_aux(
-        state.params, aux, onehot, f, loss_fn=loss_fn
-    )
     n_live = jnp.maximum(jnp.sum(w), 1.0)
     inv = 1.0 / n_live
-    params = backprop.apply_sgd(state.params, g, lr, lr, inv_batch=inv)
+    if train:
+        loss, g = backprop.grads_truncated_from_aux(
+            state.params, aux, onehot, f, loss_fn=loss_fn
+        )
+        params = backprop.apply_sgd(state.params, g, lr, lr, inv_batch=inv)
+    else:
+        loss = backprop.truncated_loss_from_aux(
+            state.params, aux, onehot, f, loss_fn
+        )
+        params = state.params
 
     acc = accumulate.astype(cfg.dtype)
     live = w * acc                              # (B,) 0/1 accumulated rows
@@ -490,6 +507,56 @@ def refresh_output_batched(state: OnlineState, beta: Array) -> OnlineState:
         p=state.params.p, q=state.params.q, W=Wt[..., :, :-1], b=Wt[..., :, -1]
     )
     return dataclasses.replace(state, params=params)
+
+
+def scatter_readout_rows(
+    state: OnlineState, Wt: Array, eligible_rows: Array, rows: Array
+) -> OnlineState:
+    """Write refreshed readouts ``Wt`` (R, Ny, s) into slot rows ``rows`` of
+    a slot-axis state where ``eligible_rows`` (R,) holds; everything else
+    (and every non-readout leaf) is untouched - a refresh only ever moves
+    (W, b).  ``rows`` must be duplicate-free (``RefreshCohorts`` pads its
+    fixed-shape schedules with distinct non-cohort indices, so an
+    ineligible pad row writes its own current value back - a no-op)."""
+    W_rows = jnp.where(
+        eligible_rows[:, None, None], Wt[..., :, :-1], state.params.W[rows]
+    )
+    b_rows = jnp.where(eligible_rows[:, None], Wt[..., :, -1],
+                       state.params.b[rows])
+    params = dataclasses.replace(
+        state.params,
+        W=state.params.W.at[rows].set(W_rows),
+        b=state.params.b.at[rows].set(b_rows),
+    )
+    return dataclasses.replace(state, params=params)
+
+
+def refresh_output_rows(
+    state: OnlineState, beta: Array, rows: Array, eligible_rows: Array
+) -> OnlineState:
+    """Recompute-mode cohort refresh of a slot-axis state: gather the due
+    rows, run the batched (s, s) Cholesky re-factorization over just those,
+    scatter the refreshed readouts back.  With ``rows = arange(S)`` and all
+    rows eligible this is leaf-for-leaf ``refresh_output_batched``."""
+    Wt = ridge.ridge_cholesky_batched(
+        state.ridge.A[rows],
+        ridge.regularize(state.ridge.B[rows], beta),
+    )
+    return scatter_readout_rows(state, Wt, eligible_rows, rows)
+
+
+def refresh_output_factor_rows(
+    state: OnlineState, rows: Array, eligible_rows: Array
+) -> OnlineState:
+    """Incremental-mode cohort refresh of a slot-axis state: the due rows
+    carry live factors of B + beta I (maintained rank-1 inside the serve
+    step), so the refresh is one batched pair of blocked triangular
+    substitutions - O(s^2 Ny) per slot, no factorization.  Beta is baked
+    into the live factor at seeding."""
+    Wt = ridge.ridge_solve_from_factor_t_batched(
+        state.ridge.A[rows], state.ridge.Lt[rows]
+    )
+    return scatter_readout_rows(state, Wt, eligible_rows, rows)
 
 
 def ensemble_logical_axes() -> OnlineState:

@@ -676,20 +676,28 @@ def _cholupdate_dense_t_flagged(U: Array, x: Array, sign) -> Tuple[Array, Array]
     n = U.shape[0]
     cidx = jnp.arange(n)
 
-    def rot_k(k, carry):
-        U, x, bad_any = carry
-        rowk = U[k]
+    # The sweep touches exactly one factor row per rotation step (row k is
+    # read, rotated, written; every other row is untouched), so it is a
+    # ``lax.scan`` over the stacked rows with only (x, bad) in the carry -
+    # each output row is written ONCE into the stacked ys.  The equivalent
+    # ``fori_loop`` carrying the whole factor forces XLA:CPU to copy the
+    # full (.., s, s) buffer every iteration when it cannot prove aliasing
+    # (under vmap at the stream server's (S, s, s) shapes that copy was
+    # ~95% of the serving step).  Identical arithmetic per element, so the
+    # scan is bit-for-bit the loop it replaces.
+    def rot_k(carry, inp):
+        x, bad_any = carry
+        k, rowk = inp
         dk = rowk[k]
         xk = x[k]
         r, c, sk, bad = _guarded_rotation(dk, xk, sign)
         new = (rowk + sign * sk * x) / c
         new = jnp.where(cidx > k, new, rowk).at[k].set(r)
-        U = U.at[k].set(new)
         x = jnp.where(cidx > k, c * x - sk * new, x)
-        return U, x, bad_any | bad
+        return (x, bad_any | bad), new
 
-    U, _, bad = jax.lax.fori_loop(
-        0, n, rot_k, (U, x, jnp.zeros((), jnp.bool_))
+    (_, bad), U = jax.lax.scan(
+        rot_k, (x, jnp.zeros((), jnp.bool_)), (cidx, U)
     )
     return U, bad
 

@@ -214,6 +214,58 @@ class WindowState:
         )
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RequestPool:
+    """Device-resident staged stream payloads, one row per serving slot.
+
+    The stream server's zero-copy request staging (``StreamServer``,
+    ``staging='device'``): a stream's padded samples are uploaded ONCE -
+    staged at ``submit``, written into the slot row at admission - and the
+    per-step ``(S, W, T, n_in)`` window batch is assembled on device by a
+    cursor-indexed gather inside the fused jitted step.  The host never
+    rebuilds or re-uploads a sample after admission.
+
+    Capacity is padded to a multiple of the serving window so every
+    cursor-aligned ``dynamic_slice`` stays in bounds without clamping; the
+    pad rows carry the same defaults the host-staging path uses for dead
+    samples (``u=0``, ``length=1``, ``label=0``), which keeps the gathered
+    batch bit-identical to host staging.
+
+    u:      (S, C, T, n_in) staged samples, ``cfg.dtype``.
+    length: (S, C) int32 valid lengths (1 on pad rows).
+    label:  (S, C) int32 labels (0 on pad rows).
+    n:      (S,)   int32 true sample count per slot row.
+    """
+
+    u: Array
+    length: Array
+    label: Array
+    n: Array
+
+    def tree_flatten(self):
+        return (self.u, self.length, self.label, self.n), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.u.shape[1]
+
+    @classmethod
+    def zeros(cls, n_slots: int, capacity: int, t_max: int, n_in: int,
+              dtype=jnp.float32) -> "RequestPool":
+        return cls(
+            u=jnp.zeros((n_slots, capacity, t_max, n_in), dtype),
+            length=jnp.ones((n_slots, capacity), jnp.int32),
+            label=jnp.zeros((n_slots, capacity), jnp.int32),
+            n=jnp.zeros((n_slots,), jnp.int32),
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class RegressionBatch:
     """A padded batch of input series with continuous targets.

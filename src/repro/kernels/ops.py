@@ -192,6 +192,37 @@ def streaming_logits(
     return out[:, :ny] + b
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "f", "chunk_t", "backend")
+)
+def streaming_logits_slots(
+    j_seq: jax.Array,      # (S, B, T, Nx) masked inputs, slot axis leading
+    lengths: jax.Array,    # (S, B) int32
+    p: jax.Array,          # (S,) per-slot reservoir gains
+    q: jax.Array,          # (S,)
+    W: jax.Array,          # (S, Ny, Nr) per-slot readout weights
+    b: jax.Array,          # (S, Ny)
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    chunk_t: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Slot-axis batched ``streaming_logits``: (S, B, Ny) in one dispatch.
+
+    The stream server's fused-infer path serves S independent slots, each
+    with its own (p, q, W, b); this wrapper owns the slot-axis batching
+    contract (one vmapped program over the fused kernel dispatch) so the
+    serving loop issues a single call instead of vmapping the public
+    single-system API at every call site."""
+    return jax.vmap(
+        lambda j_s, len_s, p_s, q_s, W_s, b_s: streaming_logits(
+            j_s, len_s, p_s, q_s, W_s, b_s, n_nodes,
+            f=f, chunk_t=chunk_t, backend=backend,
+        )
+    )(j_seq, lengths, p, q, W, b)
+
+
 # ---------------------------------------------------------------------------
 # Ridge solve
 # ---------------------------------------------------------------------------

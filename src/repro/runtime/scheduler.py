@@ -17,7 +17,9 @@ the transitions so the server can reset exactly the affected row.
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, Callable, Deque, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
 
 
 class RefreshCohorts:
@@ -50,6 +52,31 @@ class RefreshCohorts:
             for c in range(self.n_cohorts)
         ]
         self.cohort_of_slot = [i % self.n_cohorts for i in range(self.n_slots)]
+        # fixed-shape schedule for the in-program (cond-gated) refresh: every
+        # cohort's row list padded to the max cohort size with DISTINCT
+        # non-cohort slot indices flagged ok=False, so a traced scatter over
+        # the padded rows has no duplicate indices (a padded row writes its
+        # own current value back - an exact no-op) and the jitted step
+        # compiles once for every cohort.
+        self.max_cohort_size = max(
+            1, -(-self.n_slots // self.n_cohorts)
+        )
+        self._fixed: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for c in range(self.n_cohorts):
+            rows = [i for i in range(self.n_slots)
+                    if self.cohort_of_slot[i] == c]
+            ok = [True] * len(rows)
+            pad_pool = [i for i in range(self.n_slots) if i not in set(rows)]
+            while len(rows) < self.max_cohort_size:
+                rows.append(pad_pool.pop(0) if pad_pool else 0)
+                ok.append(False)
+            self._fixed[self.offsets[c]] = (
+                np.asarray(rows, np.int32), np.asarray(ok, bool)
+            )
+        self._idle_rows = (
+            np.arange(self.max_cohort_size, dtype=np.int32) % self.n_slots,
+            np.zeros(self.max_cohort_size, bool),
+        )
 
     def due_cohort(self, step: int) -> Optional[int]:
         """Cohort index due at this server step, or None."""
@@ -65,6 +92,21 @@ class RefreshCohorts:
         if c is None:
             return None
         return [i for i in range(self.n_slots) if self.cohort_of_slot[i] == c]
+
+    def due_rows_fixed(
+        self, step: int
+    ) -> Tuple[bool, np.ndarray, np.ndarray]:
+        """Fixed-shape view of ``due_slots`` for the fused in-program refresh:
+        ``(due, rows, ok)`` with ``rows``/``ok`` always ``max_cohort_size``
+        long.  Between rounds ``due`` is False and the rows are an arbitrary
+        valid index set (the cond never executes the refresh branch)."""
+        phase = step % self.refresh_every
+        fixed = self._fixed.get(phase)
+        if fixed is None:
+            rows, ok = self._idle_rows
+            return False, rows, ok
+        rows, ok = fixed
+        return True, rows, ok
 
 
 class SlotScheduler:

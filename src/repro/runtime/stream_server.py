@@ -73,26 +73,73 @@ learning-rate phase, per-sample validity weights for tail windows, dead
 slots frozen by a lane mask - so XLA never re-specializes as streams
 retire and refill (continuous batching).  Per-slot state isolation is
 structural: every lane of the vmapped step reads only its own state row.
+
+Device-resident serving pipeline (PR 5)
+---------------------------------------
+
+The paper's 1/13 computation-time win comes from keeping the whole
+train-while-infer loop on the accelerator, no per-sample host round trips.
+The software analogue is three orthogonal knobs (each independently
+regression-tested bit-for-bit against the synchronous host-staged path):
+
+* **Zero-copy request staging** (``staging='device'``, the default): a
+  stream's padded payload is uploaded ONCE - staged at ``submit``
+  (``core.types.RequestPool`` row), written into its slot row at admission
+  via one donated in-place row write - and the per-step ``(S, W, T, n_in)``
+  window batch is assembled *on device* by a cursor-indexed gather inside
+  the fused jitted step.  The per-step host work drops from rebuilding and
+  re-uploading the whole window batch in Python loops to shipping four
+  tiny ``(S,)`` control vectors.  The periodic cohort Ridge refresh is
+  folded into the same dispatch (``lax.cond``-gated on a traced due flag
+  with a fixed-shape padded cohort row set), so a serving step is ONE
+  program dispatch, refresh rounds included.  ``staging='host'`` retains
+  the PR-4 host-staged batch build (and honors ``cfg.dtype``, which the
+  PR-4 path silently upcast to float32).
+
+* **Buffer donation** (``donate=True``, the default): the batched
+  ``OnlineState`` / ``WindowState`` trees (the ``(S, s, s)`` ``B``/``Lt``
+  leaves dominate) are donated to the step and refresh executables, so XLA
+  updates them in place instead of copying the dominant buffers every
+  dispatch.  Donation never changes numerics; ``donate=False`` keeps the
+  copying PR-4 dispatch for A/B comparison.
+
+* **Async pipelining** (``pipeline_depth=D``): predictions stay on device
+  in a lag-``D`` ring; the host's per-step bookkeeping (accuracy,
+  completion, retire/refill scatter) for step ``k`` runs while the device
+  computes steps ``k+1 .. k+D``.  Only request completion or ``drain()``
+  synchronizes.  Slot lifecycle (admission/retirement) is cursor-driven
+  and therefore dispatch-time exact: pipelining delays only the *metric*
+  bookkeeping, never the serving schedule, so ``pipeline_depth=0`` is
+  bit-for-bit ``pipeline_depth=D`` over any episode.  Latency is reported
+  honestly: ``latency_percentiles_ms`` separates dispatch time (host
+  enqueue, never blocking on device compute) from drain time (the actual
+  synchronization cost), so pipelining cannot hide its sync bill.
+
+``bench_stream``'s ``pipeline`` table measures the three knobs against the
+PR-4 synchronous host-staged server (see ROADMAP "Landed (PR 5)" for the
+committed numbers).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
+from collections import deque
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import masking, ridge
+from repro.core import masking, online, ridge
 from repro.core.online import (
     OnlineState,
     init_state,
     online_serve_step,
     refresh_output_batched,
 )
-from repro.core.types import Array, DFRConfig, WindowState
+from repro.core.types import Array, DFRConfig, RequestPool, WindowState
 from repro.kernels import ops
 from repro.runtime.scheduler import RefreshCohorts, SlotScheduler
 
@@ -181,9 +228,7 @@ def _retire_window_slot(
     return U, A, B, count, WindowState(rows=rows, onehot=ohbuf, pos=pos), bad
 
 
-@partial(jax.jit, static_argnames=(
-    "cfg", "fused_infer", "maintain_factor", "retirement"))
-def _stream_step(
+def _step_core(
     cfg: DFRConfig,
     mask: Array,
     states: OnlineState,   # leading slot axis S on every leaf
@@ -192,7 +237,7 @@ def _stream_step(
     u: Array,              # (S, W, T, n_in)
     length: Array,         # (S, W) int32
     label: Array,          # (S, W) int32
-    weight: Array,         # (S, W) f32 0/1 live-sample mask (tail windows)
+    weight: Array,         # (S, W) 0/1 live-sample mask (tail windows)
     live: Array,           # (S,) bool live-slot mask
     lr: Array,             # scalar base learning rate
     phase_steps: Array,    # scalar int32: slot steps of reservoir adaptation
@@ -263,17 +308,34 @@ def _stream_step(
     lr_slot = jnp.where(in_phase1, lr, 0.0).astype(cfg.dtype)
     acc_slot = jnp.where(in_phase1, 0.0, 1.0).astype(cfg.dtype)
 
-    new_states, logits, metrics = jax.vmap(
-        lambda st, u_s, len_s, y_s, w_s, lr_s, a_s: online_serve_step(
-            cfg, mask, st, u_s, len_s, y_s, lr_s, w_s, a_s,
-            # 'defer': fold the factor AFTER the liveness cond below - an
-            # inline fold under the conds keeps the pre-sweep factor alive,
-            # forcing XLA to copy the (S, s, s) buffer per rotation instead
-            # of updating it in place (see online_serve_step docstring)
-            maintain_factor="defer" if maintain_factor else False,
-            forget=forget if retirement == "forget" else None,
-        )
-    )(states, u, length, label, weight, lr_slot, acc_slot)
+    def _serve_all(train):
+        # one vmapped fused serve step over the slot axis; 'defer' folds
+        # the factor AFTER the liveness cond below - an inline fold under
+        # the conds keeps the pre-sweep factor alive, forcing XLA to copy
+        # the (S, s, s) buffer per rotation instead of updating it in
+        # place (see online_serve_step docstring)
+        def go(operands):
+            sts, u_, len_, y_, w_, lr_, a_ = operands
+            return jax.vmap(
+                lambda st, u_s, len_s, y_s, w_s, lr_s, a_s: online_serve_step(
+                    cfg, mask, st, u_s, len_s, y_s, lr_s, w_s, a_s,
+                    maintain_factor="defer" if maintain_factor else False,
+                    forget=forget if retirement == "forget" else None,
+                    train=train,
+                )
+            )(sts, u_, len_, y_, w_, lr_, a_)
+        return go
+
+    # steady state (every live slot past its adaptation phase: lr = 0
+    # everywhere) skips the whole truncated-BP backward - SGD with lr 0 is
+    # the exact identity on range-clamped parameters, so the branches serve
+    # the same episode and the cond only sheds dead compute.  The cond sits
+    # OUTSIDE the vmap: vmapping a cond would lower to a select that runs
+    # both branches for every lane.
+    new_states, logits, metrics = jax.lax.cond(
+        jnp.any(in_phase1 & live), _serve_all(True), _serve_all(False),
+        (states, u, length, label, weight, lr_slot, acc_slot),
+    )
 
     if fused_infer:
         # route inference through the fused streaming kernel
@@ -281,12 +343,10 @@ def _stream_step(
         # call, the TPU latency path; its XLA ref is the same math as the
         # shared forward, so on CPU this only adds the extra pass)
         j_seq = masking.apply_mask(mask, u)
-        logits = jax.vmap(
-            lambda j_s, len_s, st: ops.streaming_logits(
-                j_s, len_s, st.params.p, st.params.q, st.params.W,
-                st.params.b, cfg.n_nodes, f=f,
-            )
-        )(j_seq, length, states)
+        logits = ops.streaming_logits_slots(
+            j_seq, length, states.params.p, states.params.q,
+            states.params.W, states.params.b, cfg.n_nodes, f=f,
+        )
     preds = jnp.argmax(logits, axis=-1)  # (S, W)
 
     # dead slots keep their state untouched (cond-gated like admission:
@@ -352,10 +412,168 @@ def _stream_step(
     return new_states, win, preds, metrics
 
 
+def _stream_step_impl(
+    cfg: DFRConfig,
+    mask: Array,
+    states: OnlineState,
+    fresh: OnlineState,
+    fresh_mask: Array,
+    u: Array,
+    length: Array,
+    label: Array,
+    weight: Array,
+    live: Array,
+    lr: Array,
+    phase_steps: Array,
+    beta: Array,
+    forget: Array,
+    win: Optional[WindowState],
+    fused_infer: bool = True,
+    maintain_factor: bool = False,
+    retirement: str = "none",
+) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
+    """Host-staged serving step (the retained PR-4 fallback): the caller
+    builds and uploads the padded window batch; see ``_step_core``."""
+    return _step_core(
+        cfg, mask, states, fresh, fresh_mask, u, length, label, weight,
+        live, lr, phase_steps, beta, forget, win,
+        fused_infer=fused_infer, maintain_factor=maintain_factor,
+        retirement=retirement,
+    )
+
+
+_STEP_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement")
+_stream_step = jax.jit(_stream_step_impl, static_argnames=_STEP_STATICS)
+# donated twin: OnlineState (arg 2) and WindowState (arg 14) update in place
+_stream_step_donated = jax.jit(
+    _stream_step_impl, static_argnames=_STEP_STATICS, donate_argnums=(2, 14)
+)
+
+
+def _gather_window(
+    pool: RequestPool, cursor: Array, live: Array, window: int, dtype
+) -> Tuple[Array, Array, Array, Array]:
+    """Assemble the per-step (S, W, ...) window batch on device: one
+    cursor-indexed ``dynamic_slice`` per slot row of the staged pool.
+
+    Pool capacity is a multiple of ``window`` and live cursors are
+    window-aligned and < capacity, so no slice ever clamps; the pad region
+    carries the host-staging defaults (u=0, length=1, label=0), making the
+    gathered batch bit-identical to the host-built one for live lanes.
+    ``weight`` zero-gates tail samples past the stream end and every dead
+    lane, exactly like the host path.
+    """
+    slice_d = jax.vmap(
+        lambda row, pos: jax.lax.dynamic_slice_in_dim(row, pos, window, 0)
+    )
+    u = slice_d(pool.u, cursor)
+    length = slice_d(pool.length, cursor)
+    label = slice_d(pool.label, cursor)
+    idx = cursor[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    weight = ((idx < pool.n[:, None]) & live[:, None]).astype(dtype)
+    return u, length, label, weight
+
+
+def _stream_step_pool_impl(
+    cfg: DFRConfig,
+    mask: Array,
+    states: OnlineState,
+    fresh: OnlineState,
+    fresh_mask: Array,
+    pool: RequestPool,
+    cursor: Array,         # (S,) int32 per-slot sample cursor
+    live: Array,
+    lr: Array,
+    phase_steps: Array,
+    beta: Array,
+    forget: Array,
+    win: Optional[WindowState],
+    refresh_due: Array,    # scalar bool: cohort refresh folds in this step
+    refresh_rows: Array,   # (R,) int32 fixed-shape padded cohort rows
+    refresh_ok: Array,     # (R,) bool: genuine cohort member (vs. padding)
+    fused_infer: bool = True,
+    maintain_factor: bool = False,
+    retirement: str = "none",
+    refresh_mode: str = "recompute",
+    window: int = 1,
+) -> Tuple[OnlineState, Optional[WindowState], Array]:
+    """Device-resident serving step: cursor-indexed window gather from the
+    staged ``RequestPool``, the fused serve step, and the cohort Ridge
+    refresh - ONE dispatch for all three.
+
+    The refresh is ``lax.cond``-gated on the traced ``refresh_due`` flag
+    with a fixed-shape padded cohort row set (``RefreshCohorts.
+    due_rows_fixed``), so refresh rounds cost zero extra dispatches and
+    off-rounds skip the refresh compute entirely.  The refresh branch runs
+    the exact math of the standalone ``_stream_refresh_rows`` /
+    ``_stream_refresh_factor_rows`` entry points on the post-step state,
+    preserving the PR-4 step->refresh ordering.
+    """
+    u, length, label, weight = _gather_window(
+        pool, cursor, live, window, cfg.dtype
+    )
+    new_states, win, preds, _ = _step_core(
+        cfg, mask, states, fresh, fresh_mask, u, length, label, weight,
+        live, lr, phase_steps, beta, forget, win,
+        fused_infer=fused_infer, maintain_factor=maintain_factor,
+        retirement=retirement,
+    )
+
+    def _refresh(st: OnlineState) -> OnlineState:
+        el = (
+            refresh_ok
+            & live[refresh_rows]
+            & (st.step[refresh_rows] >= phase_steps)
+            & (st.ridge.count[refresh_rows] > 0)
+        )
+        if refresh_mode == "incremental":
+            return online.refresh_output_factor_rows(st, refresh_rows, el)
+        return online.refresh_output_rows(st, beta, refresh_rows, el)
+
+    new_states = jax.lax.cond(
+        refresh_due, _refresh, lambda st: st, new_states
+    )
+    return new_states, win, preds
+
+
+_POOL_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement",
+                 "refresh_mode", "window")
+_stream_step_pool = jax.jit(
+    _stream_step_pool_impl, static_argnames=_POOL_STATICS
+)
+# donated twin: OnlineState (arg 2) and WindowState (arg 12) update in
+# place; the pool (arg 5) is NOT donated - it is read-only here and reused
+# verbatim by the next step
+_stream_step_pool_donated = jax.jit(
+    _stream_step_pool_impl, static_argnames=_POOL_STATICS,
+    donate_argnums=(2, 12),
+)
+
+
+def _pool_write_impl(
+    pool: RequestPool, i: Array, u: Array, length: Array, label: Array,
+    n: Array,
+) -> RequestPool:
+    return RequestPool(
+        u=pool.u.at[i].set(u),
+        length=pool.length.at[i].set(length),
+        label=pool.label.at[i].set(label),
+        n=pool.n.at[i].set(n),
+    )
+
+
+# always donated: admission writes one slot row into the (dominant) staged
+# u buffer in place instead of copying the whole pool per admission
+_pool_write = jax.jit(_pool_write_impl, donate_argnums=(0,))
+
+
 @jax.jit
 def _snapshot_slot(states: OnlineState, i: Array) -> OnlineState:
     """Slot row i of the batched state as a single-system state (one
-    dispatch for the whole tree; module-level so servers share the cache)."""
+    dispatch for the whole tree; module-level so servers share the cache).
+    The gather materializes fresh buffers, so the snapshot stays valid
+    after later (donated) steps consume the batched state it was read
+    from - the donation-safety contract of ``StreamRequest.final_state``."""
     return jax.tree_util.tree_map(lambda leaf: leaf[i], states)
 
 
@@ -378,40 +596,17 @@ def _stream_refresh(
     )
 
 
-def _scatter_readout(
-    states: OnlineState, Wt: Array, eligible: Array, rows: Array
-) -> OnlineState:
-    """Write refreshed readouts Wt (C, Ny, s) into slot rows ``rows`` where
-    ``eligible`` (S,) holds; everything else (and every non-readout leaf)
-    is untouched - a refresh only ever moves (W, b)."""
-    el = eligible[rows]
-    W_rows = jnp.where(el[:, None, None], Wt[..., :, :-1], states.params.W[rows])
-    b_rows = jnp.where(el[:, None], Wt[..., :, -1], states.params.b[rows])
-    params = dataclasses.replace(
-        states.params,
-        W=states.params.W.at[rows].set(W_rows),
-        b=states.params.b.at[rows].set(b_rows),
-    )
-    return dataclasses.replace(states, params=params)
-
-
-@jax.jit
-def _stream_refresh_rows(
+def _stream_refresh_rows_impl(
     states: OnlineState, beta: Array, eligible: Array, rows: Array
 ) -> OnlineState:
     """Recompute-mode cohort refresh: gather the due cohort's rows, run the
     batched (s, s) Cholesky re-factorization over just those, scatter the
     refreshed readouts back.  With ``rows = arange(S)`` this is leaf-for-leaf
     identical to ``_stream_refresh`` (the staggering equivalence oracle)."""
-    Wt = ridge.ridge_cholesky_batched(
-        states.ridge.A[rows],
-        ridge.regularize(states.ridge.B[rows], beta),
-    )
-    return _scatter_readout(states, Wt, eligible, rows)
+    return online.refresh_output_rows(states, beta, rows, eligible[rows])
 
 
-@jax.jit
-def _stream_refresh_factor_rows(
+def _stream_refresh_factor_rows_impl(
     states: OnlineState, eligible: Array, rows: Array
 ) -> OnlineState:
     """Incremental-mode cohort refresh: the due cohort's slots carry live
@@ -419,10 +614,17 @@ def _stream_refresh_factor_rows(
     refresh is one batched pair of blocked triangular substitutions -
     O(s^2 Ny) per slot, no factorization.  Beta is baked into the live
     factor at seeding."""
-    Wt = ridge.ridge_solve_from_factor_t_batched(
-        states.ridge.A[rows], states.ridge.Lt[rows]
-    )
-    return _scatter_readout(states, Wt, eligible, rows)
+    return online.refresh_output_factor_rows(states, rows, eligible[rows])
+
+
+_stream_refresh_rows = jax.jit(_stream_refresh_rows_impl)
+_stream_refresh_rows_donated = jax.jit(
+    _stream_refresh_rows_impl, donate_argnums=(0,)
+)
+_stream_refresh_factor_rows = jax.jit(_stream_refresh_factor_rows_impl)
+_stream_refresh_factor_rows_donated = jax.jit(
+    _stream_refresh_factor_rows_impl, donate_argnums=(0,)
+)
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +660,23 @@ class StreamServer:
         ``refresh_mode='incremental'`` (the downdate needs the live
         factor).  The equivalence contract: a capacity >= the stream
         length serves bit-for-bit the ``retirement='none'`` episode.
+
+    Serving pipeline (PR 5, see the module docstring):
+
+      * ``staging='device'`` (default) - zero-copy request staging: payloads
+        upload once, the window batch is gathered on device and the cohort
+        refresh folds into the same single dispatch.  ``'host'`` retains
+        the PR-4 per-step host batch build.
+      * ``donate=True`` (default) - the step/refresh executables update the
+        batched state trees in place (never changes numerics).
+      * ``pipeline_depth=D`` - overlap host bookkeeping for step k with
+        device compute of steps k+1..k+D; predictions ride a lag-D device
+        ring drained by ``drain()`` / completion.  D=0 is the synchronous
+        PR-4 schedule bit-for-bit.
+      * ``pool_capacity`` - pre-size the staged pool (samples per slot row,
+        rounded up to a window multiple).  Leave None to let it grow to the
+        largest submitted stream (each growth re-specializes the jitted
+        gather, so pre-sizing is worth it when stream lengths are known).
     """
 
     def __init__(
@@ -477,6 +696,11 @@ class StreamServer:
         retirement: str = "none",
         forget: float = 1.0,
         retire_window: int = 0,
+        staging: str = "device",
+        pipeline_depth: int = 0,
+        donate: bool = True,
+        pool_capacity: Optional[int] = None,
+        latency_window: int = 4096,
     ):
         if refresh_mode not in ("recompute", "incremental"):
             raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
@@ -495,6 +719,16 @@ class StreamServer:
                     f"retirement='window' needs retire_window >= 1, got "
                     f"{retire_window!r}"
                 )
+        if staging not in ("device", "host"):
+            raise ValueError(f"unknown staging: {staging!r}")
+        if pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {pipeline_depth!r}"
+            )
+        if latency_window < 1:
+            raise ValueError(
+                f"latency_window must be >= 1, got {latency_window!r}"
+            )
         self.cfg = cfg
         self.t_max = int(t_max)
         self.max_streams = int(max_streams)
@@ -507,6 +741,10 @@ class StreamServer:
         self.retirement = retirement
         self.forget = jnp.asarray(forget, cfg.dtype)
         self.retire_window = int(retire_window)
+        self.staging = staging
+        self.pipeline_depth = int(pipeline_depth)
+        self.donate = bool(donate)
+        self._np_dtype = np.dtype(cfg.dtype)
         self.cohorts = RefreshCohorts(
             self.max_streams, self.refresh_every, refresh_cohorts
         )
@@ -546,11 +784,68 @@ class StreamServer:
                     self.retire_window, cfg.s, cfg.n_classes, cfg.dtype
                 ),
             )
+        # device staging: the per-slot request pool (uploads happen once at
+        # submit/admit; the jitted step gathers windows by cursor)
+        self.pool: Optional[RequestPool] = None
+        self._staged: Dict[int, Tuple] = {}
+        if self.staging == "device":
+            cap = self._round_capacity(pool_capacity or self.window)
+            self.pool = RequestPool.zeros(
+                self.max_streams, cap, self.t_max, cfg.n_in, cfg.dtype
+            )
         self._admitted_this_step: List[int] = []
+        # steady-state control vectors change rarely: cache their device
+        # copies so a typical step uploads only the (S,) cursor (the
+        # refresh schedule cycles through refresh_every phases, the live /
+        # fresh masks only move on admission/retirement)
+        self._mask_cache: Dict[bytes, Array] = {}
+        self._due_cache: Dict[int, Tuple[Array, Array, Array]] = {}
         self.global_step = 0
-        self.step_times_s: List[float] = []   # per-step wall time (latency)
+        # async pipeline: (device preds, per-slot bookkeeping meta) entries,
+        # drained once more than pipeline_depth steps are in flight
+        self._inflight: Deque[Tuple[Array, List[Tuple]]] = deque()
+        # bounded latency records (ring buffers): total per-step wall time,
+        # plus the honest split into non-blocking dispatch vs blocking drain
+        self.step_times_s: Deque[float] = deque(maxlen=latency_window)
+        self.dispatch_times_s: Deque[float] = deque(maxlen=latency_window)
+        self.drain_times_s: Deque[float] = deque(maxlen=latency_window)
 
     # -- request lifecycle -------------------------------------------------------
+
+    def _round_capacity(self, n: int) -> int:
+        """Pool rows are window-aligned so cursor slices never clamp."""
+        return max(self.window, -(-int(n) // self.window) * self.window)
+
+    def _stage_request(self, req: StreamRequest) -> None:
+        """Pad + upload the stream's full payload ONCE (submit-time): the
+        per-step path never touches the sample arrays again."""
+        cap = self._round_capacity(req.n_samples)
+        if cap > self.pool.capacity:
+            self._grow_pool(cap)
+        cap = self.pool.capacity
+        u = np.zeros((cap, self.t_max, self.cfg.n_in), self._np_dtype)
+        u[: req.n_samples] = req.u
+        length = np.ones((cap,), np.int32)
+        length[: req.n_samples] = req.length
+        label = np.zeros((cap,), np.int32)
+        label[: req.n_samples] = req.label
+        self._staged[id(req)] = (
+            jnp.asarray(u), jnp.asarray(length), jnp.asarray(label),
+            jnp.asarray(req.n_samples, jnp.int32), cap,
+        )
+
+    def _grow_pool(self, cap: int) -> None:
+        """Grow every slot row to ``cap`` samples (new longest stream).
+        Pad values match the staging defaults; shapes change, so the jitted
+        gather step re-specializes once per growth."""
+        pad = cap - self.pool.capacity
+        self.pool = RequestPool(
+            u=jnp.pad(self.pool.u, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            length=jnp.pad(self.pool.length, ((0, 0), (0, pad)),
+                           constant_values=1),
+            label=jnp.pad(self.pool.label, ((0, 0), (0, pad))),
+            n=self.pool.n,
+        )
 
     def submit(self, req: StreamRequest) -> None:
         if req.u.shape[1] != self.t_max:
@@ -559,85 +854,174 @@ class StreamServer:
                 f"server expects t_max={self.t_max}"
             )
         req.submit_t = time.perf_counter()
+        if self.staging == "device":
+            self._stage_request(req)
         self.sched.submit(req)
 
     def _on_admit(self, i: int, req: StreamRequest) -> None:
-        """Mark slot row i for the in-program fresh-state reset."""
+        """Mark slot row i for the in-program fresh-state reset and write
+        the staged payload into its pool row (one donated in-place write)."""
         self.slot_pos[i] = 0
         self._admitted_this_step.append(i)
+        if self.staging == "device":
+            staged = self._staged.pop(id(req), None)
+            if staged is None or staged[4] != self.pool.capacity:
+                # the pool grew (or the entry predates a growth): re-stage
+                # against the current capacity - rare, costs one upload
+                self._stage_request(req)
+                staged = self._staged.pop(id(req))
+            u, length, label, n, _ = staged
+            self.pool = _pool_write(
+                self.pool, jnp.asarray(i, jnp.int32), u, length, label, n
+            )
 
     def _snapshot_row(self, i: int) -> OnlineState:
         """Copy of slot i's state (the retiring stream's final model)."""
         return _snapshot_slot(self.states, jnp.asarray(i))
 
+    def _cached_mask(self, mask_np: np.ndarray) -> Array:
+        """Device copy of a small (S,) bool control mask, cached by value."""
+        key = mask_np.tobytes()
+        hit = self._mask_cache.get(key)
+        if hit is None:
+            if len(self._mask_cache) > 64:   # bounded (masks cycle)
+                self._mask_cache.clear()
+            hit = self._mask_cache[key] = jnp.asarray(mask_np)
+        return hit
+
+    def _cached_due(self, step: int) -> Tuple[Array, Array, Array]:
+        """Device copy of the fixed-shape refresh schedule for this step's
+        phase (cycles with period ``refresh_every``: cached once each)."""
+        phase = step % self.refresh_every
+        hit = self._due_cache.get(phase)
+        if hit is None:
+            due, rows, ok = self.cohorts.due_rows_fixed(step)
+            hit = self._due_cache[phase] = (
+                jnp.asarray(due), jnp.asarray(rows), jnp.asarray(ok)
+            )
+        return hit
+
     # -- the serving loop --------------------------------------------------------
 
     def step(self) -> None:
-        """One global step: admit, batch one window per live slot, run the
-        jitted fixed-shape step, scatter predictions, retire finished."""
+        """One global step: admit, advance every live slot one window via
+        the fused fixed-shape dispatch, book-keep at lag ``pipeline_depth``.
+
+        ``staging='device'`` gathers the window batch on device from the
+        staged pool (the host ships only (S,)-sized control vectors) and
+        folds any due cohort refresh into the same dispatch;
+        ``staging='host'`` retains the PR-4 build-pad-upload loop and the
+        separate refresh dispatch.  Predictions enter the in-flight ring;
+        entries deeper than ``pipeline_depth`` are drained (the only
+        blocking device read), so depth 0 is fully synchronous.
+        """
+        t_start = time.perf_counter()
         self._admitted_this_step.clear()
         self.sched.admit(self._on_admit)
         S, W, T = self.max_streams, self.window, self.t_max
-        u = np.zeros((S, W, T, self.cfg.n_in), np.float32)
-        length = np.ones((S, W), np.int32)    # dead samples: length 1, weight 0
-        label = np.zeros((S, W), np.int32)
-        weight = np.zeros((S, W), np.float32)
         live = np.zeros((S,), bool)
         fresh_mask = np.zeros((S,), bool)
         fresh_mask[self._admitted_this_step] = True
+        meta: List[Tuple] = []
         for i, req in self.sched.live():
             lo = int(self.slot_pos[i])
             n = min(W, req.n_samples - lo)
-            u[i, :n] = req.u[lo:lo + n]
-            length[i, :n] = req.length[lo:lo + n]
-            label[i, :n] = req.label[lo:lo + n]
-            weight[i, :n] = 1.0
             live[i] = True
+            meta.append((i, req, lo, n))
 
-        t0 = time.perf_counter()
-        self.states, self.win, preds, _ = _stream_step(
-            self.cfg, self.mask, self.states, self._fresh_row,
-            jnp.asarray(fresh_mask),
-            jnp.asarray(u), jnp.asarray(length), jnp.asarray(label),
-            jnp.asarray(weight), jnp.asarray(live), self.lr,
-            self.phase_steps, self.beta, self.forget, self.win,
+        step_kw = dict(
             fused_infer=self.fused_infer,
             maintain_factor=(self.refresh_mode == "incremental"),
             retirement=self.retirement,
         )
-        self.global_step += 1
-        due = self.cohorts.due_slots(self.global_step)
-        if due is not None:
-            eligible = self._refresh_eligible(jnp.asarray(live))
-            if len(due) < self.max_streams:
-                cohort = np.zeros((self.max_streams,), bool)
-                cohort[due] = True
-                eligible = eligible & jnp.asarray(cohort)
-            rows = jnp.asarray(due, jnp.int32)
-            if self.refresh_mode == "incremental":
-                self.states = _stream_refresh_factor_rows(
-                    self.states, eligible, rows
-                )
-            else:
-                self.states = _stream_refresh_rows(
-                    self.states, self.beta, eligible, rows
-                )
-        preds_np = np.asarray(preds)   # blocks: the served predictions
-        self.step_times_s.append(time.perf_counter() - t0)
+        if self.staging == "device":
+            due, rows, ok = self._cached_due(self.global_step + 1)
+            step_fn = (_stream_step_pool_donated if self.donate
+                       else _stream_step_pool)
+            self.states, self.win, preds = step_fn(
+                self.cfg, self.mask, self.states, self._fresh_row,
+                self._cached_mask(fresh_mask), self.pool,
+                jnp.asarray(self.slot_pos.astype(np.int32)),
+                self._cached_mask(live), self.lr, self.phase_steps,
+                self.beta, self.forget, self.win, due, rows, ok,
+                refresh_mode=self.refresh_mode, window=W, **step_kw,
+            )
+            self.global_step += 1
+        else:
+            # PR-4 host staging: rebuild + upload the padded window batch
+            # (in cfg.dtype - the PR-4 code hardcoded float32 here, silently
+            # upcasting non-f32 configs)
+            u = np.zeros((S, W, T, self.cfg.n_in), self._np_dtype)
+            length = np.ones((S, W), np.int32)  # dead samples: len 1, w 0
+            label = np.zeros((S, W), np.int32)
+            weight = np.zeros((S, W), self._np_dtype)
+            for i, req, lo, n in meta:
+                u[i, :n] = req.u[lo:lo + n]
+                length[i, :n] = req.length[lo:lo + n]
+                label[i, :n] = req.label[lo:lo + n]
+                weight[i, :n] = 1.0
+            step_fn = _stream_step_donated if self.donate else _stream_step
+            self.states, self.win, preds, _ = step_fn(
+                self.cfg, self.mask, self.states, self._fresh_row,
+                jnp.asarray(fresh_mask),
+                jnp.asarray(u), jnp.asarray(length), jnp.asarray(label),
+                jnp.asarray(weight), jnp.asarray(live), self.lr,
+                self.phase_steps, self.beta, self.forget, self.win, **step_kw,
+            )
+            self.global_step += 1
+            due = self.cohorts.due_slots(self.global_step)
+            if due is not None:
+                eligible = self._refresh_eligible(jnp.asarray(live))
+                if len(due) < self.max_streams:
+                    cohort = np.zeros((self.max_streams,), bool)
+                    cohort[due] = True
+                    eligible = eligible & jnp.asarray(cohort)
+                rows = jnp.asarray(due, jnp.int32)
+                if self.refresh_mode == "incremental":
+                    fn = (_stream_refresh_factor_rows_donated if self.donate
+                          else _stream_refresh_factor_rows)
+                    self.states = fn(self.states, eligible, rows)
+                else:
+                    fn = (_stream_refresh_rows_donated if self.donate
+                          else _stream_refresh_rows)
+                    self.states = fn(self.states, self.beta, eligible, rows)
 
-        for i, req in self.sched.live():
-            lo = int(self.slot_pos[i])
-            n = min(W, req.n_samples - lo)
+        # dispatch-time bookkeeping: the slot lifecycle is cursor-driven
+        # (independent of prediction values), so retirement/refill never
+        # waits on the device - only the metric bookkeeping rides the ring
+        for i, req, lo, n in meta:
+            self.slot_pos[i] += n
+            if self.slot_pos[i] >= req.n_samples:
+                req.final_state = self._snapshot_row(i)
+                self.sched.retire(i)   # continuous batching: slot refills
+        self._inflight.append((preds, meta))
+        self.dispatch_times_s.append(time.perf_counter() - t_start)
+        while len(self._inflight) > self.pipeline_depth:
+            self._drain_one()
+        self.step_times_s.append(time.perf_counter() - t_start)
+
+    def _drain_one(self) -> None:
+        """Materialize the oldest in-flight step's predictions (the only
+        blocking device read) and run its per-sample bookkeeping."""
+        preds, meta = self._inflight.popleft()
+        t0 = time.perf_counter()
+        preds_np = np.asarray(preds)   # blocks: the served predictions
+        self.drain_times_s.append(time.perf_counter() - t0)
+        for i, req, lo, n in meta:
             for k in range(n):
                 pred = int(preds_np[i, k])
                 req.preds.append(pred)
                 req.correct += int(pred == int(req.label[lo + k]))
-            self.slot_pos[i] += n
-            if self.slot_pos[i] >= req.n_samples:
-                req.final_state = self._snapshot_row(i)
+            if lo + n >= req.n_samples:
                 req.done = True
                 req.finish_t = time.perf_counter()
-                self.sched.retire(i)   # continuous batching: slot refills
+
+    def drain(self) -> None:
+        """Synchronize: flush every in-flight pipeline entry (predictions,
+        accuracy, completion flags).  Idempotent; called automatically by
+        ``run_until_drained``."""
+        while self._inflight:
+            self._drain_one()
 
     def _refresh_eligible(self, live: Array) -> Array:
         """Live slots past the phase boundary with accumulated samples."""
@@ -647,11 +1031,29 @@ class StreamServer:
             & (self.states.ridge.count > 0)
         )
 
-    def run_until_drained(self, max_steps: int = 100000) -> List[StreamRequest]:
+    def run_until_drained(
+        self, max_steps: int = 100000, strict: bool = False
+    ) -> List[StreamRequest]:
+        """Serve until every stream completes (then flush the pipeline).
+
+        If ``max_steps`` elapses with streams still live or queued, the
+        truncation is never silent: a ``RuntimeWarning`` reports how many
+        streams were left undrained (``strict=True`` raises instead).
+        """
         steps = 0
         while self.sched.active() and steps < max_steps:
             self.step()
             steps += 1
+        self.drain()
+        if self.sched.active():
+            undrained = len(self.sched.live()) + len(self.sched.queue)
+            msg = (
+                f"run_until_drained stopped at max_steps={max_steps} with "
+                f"{undrained} stream(s) still live or queued"
+            )
+            if strict:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return self.sched.completed
 
     # -- diagnostics ---------------------------------------------------------------
@@ -661,11 +1063,30 @@ class StreamServer:
         return self.sched.completed
 
     def latency_percentiles_ms(self) -> Dict[str, float]:
-        """p50/p99 of the per-step (one window per live slot) wall time."""
-        if not self.step_times_s:
-            return {"p50_ms": 0.0, "p99_ms": 0.0}
-        t = np.asarray(self.step_times_s) * 1e3
-        return {
-            "p50_ms": float(np.percentile(t, 50)),
-            "p99_ms": float(np.percentile(t, 99)),
-        }
+        """p50/p99 of the per-step wall time, split honestly for pipelining.
+
+        ``p50_ms``/``p99_ms``: total wall time of ``step()`` (dispatch plus
+        whatever draining that step performed), measured from ``step()``
+        entry - so it includes admission and, on the host-staged path, the
+        per-step batch build (which PR-4's timing excluded: its numbers are
+        not directly comparable to these).  ``dispatch_*``: the non-blocking host
+        portion (admit, control vectors, program enqueue).  ``drain_*``:
+        the blocking device reads - the synchronization cost that async
+        pipelining defers but must still pay, reported per drained entry so
+        a deep pipeline cannot hide it.  All records ride bounded ring
+        buffers (``latency_window`` entries), so long-lived servers don't
+        grow without bound.
+        """
+        out: Dict[str, float] = {}
+        for prefix, rec in (("", self.step_times_s),
+                            ("dispatch_", self.dispatch_times_s),
+                            ("drain_", self.drain_times_s)):
+            if rec:
+                t = np.asarray(rec) * 1e3
+                p50, p99 = (float(np.percentile(t, 50)),
+                            float(np.percentile(t, 99)))
+            else:
+                p50 = p99 = 0.0
+            out[f"{prefix}p50_ms"] = p50
+            out[f"{prefix}p99_ms"] = p99
+        return out

@@ -136,7 +136,10 @@ def test_refresh_cohorts_schedule():
 
 def test_staggered_cohort1_is_bitwise_the_global_refresh():
     """The cohort-row refresh path at C=1 serves bit-identical predictions
-    and final states to the PR-2 global ``_stream_refresh``."""
+    and final states to the PR-2 global ``_stream_refresh``.  Pinned to the
+    host-staged un-donated path: the device-staged pipeline folds the
+    refresh into the fused step and never routes through this entry point
+    (its own equivalence battery lives in test_stream_pipeline.py)."""
     import repro.runtime.stream_server as ss
 
     def serve(force_global):
@@ -146,7 +149,8 @@ def test_staggered_cohort1_is_bitwise_the_global_refresh():
                 lambda states, beta, eligible, rows:
                     ss._stream_refresh(states, beta, eligible))
         try:
-            return _serve_collect(_episode_streams())
+            return _serve_collect(_episode_streams(), staging="host",
+                                  donate=False)
         finally:
             ss._stream_refresh_rows = orig
 
