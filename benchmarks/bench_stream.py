@@ -74,11 +74,25 @@ anchored to a regime that no longer exists), and the forget/window paths
 climb back to near pre-drift accuracy at a modest throughput cost (the
 window path pays the extra per-sample eviction downdate).
 
+Fifth table (ISSUE 6, ``--sharded``): served-samples/sec vs slot-mesh
+device count (1/2/4/8) at Nx in {8, 16} x S in {64, 256}, window=1.  The
+sharded episodes are bitwise the single-device episodes, so the columns
+measure pure serving-harness scaling.  Tracked in BENCH_stream_sharded.json
+(written by ``benchmarks/run.py --only stream_sharded``).  On hosts with
+fewer physical cores than mesh devices the forced-device sweep measures
+sharding *overhead*, not speedup - the rows record ``host_cores`` so the
+trajectory stays interpretable.
+
     PYTHONPATH=src python benchmarks/bench_stream.py [--smoke|--full]
+    PYTHONPATH=src python benchmarks/bench_stream.py --sharded [--json]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 from typing import Dict, List, Tuple
 
@@ -428,6 +442,106 @@ def _bench_drift_case(
     return row
 
 
+# ---------------------------------------------------------------------------
+# Sharded table (ISSUE 6): served-samples/sec vs slot-mesh device count
+# ---------------------------------------------------------------------------
+
+SHARDED_DEVICE_COUNTS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def _bench_sharded_case(n_streams: int, n_samples: int, t_len: int,
+                        n_nodes: int, window: int = 1, reps: int = 2,
+                        device_counts: Tuple[int, ...] = SHARDED_DEVICE_COUNTS
+                        ) -> Dict:
+    """One device-count scaling cell: the identical episode (same streams,
+    refresh_mode='incremental', window=1 sample-by-sample serving) served
+    by ``StreamServer(devices=n)`` for each mesh size.  Sharded episodes
+    are bitwise the devices=1 episode (tests/test_stream_sharded.py), so
+    every column serves exactly the same computation - the table measures
+    the scaling of the serving harness alone.
+
+    Honest caveat, recorded in the row: with
+    ``--xla_force_host_platform_device_count`` the "devices" share the
+    host's physical cores (``host_cores``).  On a machine with fewer cores
+    than mesh devices the sweep measures sharding *overhead* (per-device
+    dispatch on a shared core), not speedup - the speedup column needs
+    cores >= devices (or real accelerators) to show scaling.
+    """
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=n_nodes)
+    phase_steps, refresh_every = 4, 5
+    total_samples = n_streams * n_samples
+    row: Dict = {
+        "table": "stream-sharded",
+        "cell": f"S{n_streams}/Nx{n_nodes}",
+        "samples": n_samples,
+        "window": window,
+        "host_cores": os.cpu_count(),
+        "host_devices": jax.device_count(),
+    }
+    base_time = None
+    for nd in device_counts:
+        if n_streams % nd or nd > jax.device_count():
+            continue
+
+        def run_once():
+            streams = _make_streams(n_streams, n_samples, t_len, 3, 4,
+                                    seed=1)
+            return _serve_batched(cfg, streams, t_len, window, phase_steps,
+                                  refresh_every, refresh_mode="incremental",
+                                  devices=nd)
+
+        run_once()      # warm this mesh size's jitted program
+        best = None
+        for _ in range(reps):
+            t, _ = run_once()
+            best = t if best is None or t < best else best
+        row[f"d{nd}_samples_per_s"] = round(total_samples / best, 1)
+        if base_time is None:
+            base_time = best
+        else:
+            row[f"d{nd}_speedup"] = round(base_time / best, 2)
+    return row
+
+
+def run_sharded(full: bool = False, smoke: bool = False) -> List[Dict]:
+    """The device-count scaling table.  Needs >= 8 XLA devices; when the
+    process has fewer (the common single-device CLI run), it re-execs
+    itself in a subprocess with ``--xla_force_host_platform_device_count=8``
+    (the flag must be set before jax initializes) and parses the rows back.
+    """
+    # sharded cases (n_streams, n_samples, t_len, n_nodes): Nx in {8, 16} x
+    # S in {64, 256} per the tracked BENCH_stream_sharded.json contract
+    if smoke:
+        cases = [(16, 8, 16, 8)]
+        counts: Tuple[int, ...] = (1, 2, 8)
+    else:
+        cases = [(64, 16, 24, 8), (64, 16, 24, 16),
+                 (256, 16, 24, 8), (256, 16, 24, 16)]
+        counts = SHARDED_DEVICE_COUNTS
+    if jax.device_count() < max(counts):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count="
+                              f"{max(counts)}").strip()
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ("src", env.get("PYTHONPATH", "")) if p
+        )
+        mode = ["--smoke"] if smoke else (["--full"] if full else [])
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--sharded", "--json", *mode],
+            capture_output=True, text=True, env=env, timeout=3600,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"sharded bench subprocess failed:\n{out.stderr[-3000:]}"
+            )
+        return [json.loads(line) for line in out.stdout.splitlines()
+                if line.startswith("{")]
+    return [_bench_sharded_case(*c, device_counts=counts) for c in cases]
+
+
 def run(full: bool = False, smoke: bool = False) -> List[Dict]:
     # The batched step amortizes dispatch + the per-window small-op work
     # across all S slots; the headline Nx=8/S=16 regime is where the >= 3x
@@ -491,9 +605,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny case (CI lane)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="the device-count scaling table only (forces 8 "
+                         "virtual devices in a subprocess when needed)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit rows as JSON lines (machine readable)")
     args = ap.parse_args()
-    for row in run(full=args.full, smoke=args.smoke):
-        print(row)
+    rows = (run_sharded(full=args.full, smoke=args.smoke) if args.sharded
+            else run(full=args.full, smoke=args.smoke))
+    for row in rows:
+        print(json.dumps(row) if args.json else row)
 
 
 if __name__ == "__main__":

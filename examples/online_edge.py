@@ -30,10 +30,39 @@ online accuracy before / at / after each stream's drift point - the
 regime where the sample-retirement policies (``--forget`` lambda, or
 ``--retire-window`` capacity with the guarded hyperbolic downdate) keep
 tracking while the grow-only default stays anchored to the dead regime.
+
+Sharded serving (``--devices N``): shard the server's slot axis over N
+devices (PR 6; ``--max-streams`` is rounded up to a multiple of N).  On a
+CPU-only host the flag also forces the XLA host-device split, so
+``--devices 8`` works out of the box - the episode is bitwise the
+single-device one; only the placement changes.
 """
 import argparse
+import os
+import sys
+
+
+def _sniff_devices() -> int:
+    """--devices before jax initializes: device counts lock on first jax
+    import, so the CPU host split must be forced from argv, pre-import."""
+    argv = sys.argv
+    for k, a in enumerate(argv):
+        if a == "--devices" and k + 1 < len(argv):
+            return int(argv[k + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 1
+
+
+_DEVICES = _sniff_devices()
+if _DEVICES > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_DEVICES}"
+    ).strip()
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import OnlineDFR
@@ -61,11 +90,29 @@ def _server_retirement_kw(args) -> dict:
 
 
 def _server_pipeline_kw(args) -> dict:
-    """Map the serving-pipeline flags to StreamServer kwargs (PR 5)."""
+    """Map the serving-pipeline flags to StreamServer kwargs (PR 5/6)."""
     return {
         "pipeline_depth": args.pipeline_depth,
         "staging": "host" if args.host_staging else "device",
+        "devices": args.devices,
     }
+
+
+def _effective_max_streams(args) -> int:
+    """Round --max-streams up to a multiple of --devices (equal shards)."""
+    ms = args.max_streams
+    if args.devices > 1 and ms % args.devices:
+        ms = -(-ms // args.devices) * args.devices
+        print(f"note: rounding --max-streams up to {ms} "
+              f"(multiple of --devices {args.devices})")
+    return ms
+
+
+def _print_mesh(server) -> None:
+    if server.mesh is not None:
+        print(f"  slot mesh: {server.devices} devices x "
+              f"{server.max_streams // server.devices} slots each "
+              f"({jax.device_count()} XLA devices visible)")
 
 
 def run_drift(args) -> None:
@@ -81,14 +128,15 @@ def run_drift(args) -> None:
 
     kw = _server_retirement_kw(args)
     server = StreamServer(
-        cfg, t_max=t_len, max_streams=args.max_streams, window=args.window,
-        phase_steps=3, refresh_every=2,
+        cfg, t_max=t_len, max_streams=_effective_max_streams(args),
+        window=args.window, phase_steps=3, refresh_every=2,
         refresh_cohorts=args.refresh_cohorts,
         **_server_pipeline_kw(args), **kw,
     )
     policy = kw.get("retirement", "none")
     print(f"serving {len(streams)} drifting NARMA streams x {n} samples "
           f"(switch at sample {switches[0]}; retirement={policy})")
+    _print_mesh(server)
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()
@@ -147,6 +195,12 @@ def main():
                          "during device compute of k+1..k+D (0 = fully "
                          "synchronous; the served episode is bit-identical "
                          "at every depth)")
+    ap.add_argument("--devices", type=int, default=1, metavar="N",
+                    help="shard the server's slot axis over N devices "
+                         "(PR 6; rounds --max-streams up to a multiple of "
+                         "N; forces the XLA host-device split on CPU so "
+                         "N > physical devices works; the episode is "
+                         "bitwise the single-device one)")
     ap.add_argument("--host-staging", action="store_true",
                     help="use the PR-4 host-staged batch build instead of "
                          "the device-resident request pool (A/B baseline; "
@@ -186,18 +240,19 @@ def main():
                              windows_per_stream - 1))
     kw = _server_retirement_kw(args)
     server = StreamServer(
-        cfg, t_max=train.t_max, max_streams=args.max_streams,
+        cfg, t_max=train.t_max, max_streams=_effective_max_streams(args),
         window=args.window, phase_steps=phase_steps, refresh_every=5,
         refresh_cohorts=args.refresh_cohorts,
         **_server_pipeline_kw(args), **kw,
     )
     print(f"serving {len(streams)} streams x ~{len(splits[0])} samples "
-          f"({args.max_streams} slots, windows of {args.window}); phase 1 "
+          f"({server.max_streams} slots, windows of {args.window}); phase 1 "
           f"(reservoir adaptation) for {phase_steps} windows/stream, then "
           f"phase 2 ((A,B) accumulation, {server.refresh_mode} ridge refresh "
           f"every 5 rounds over {server.cohorts.n_cohorts} cohort(s), "
           f"retirement={server.retirement}) - the paper's protocol, "
           f"train-while-serve")
+    _print_mesh(server)
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()

@@ -559,25 +559,49 @@ def refresh_output_factor_rows(
     return scatter_readout_rows(state, Wt, eligible_rows, rows)
 
 
+def _state_logical_axes(*leading: str) -> OnlineState:
+    """``OnlineState``-shaped pytree of logical-axes tuples: every leaf
+    leads with ``leading`` (one name per stacked leading dim), trailing
+    dims replicated.  Feed to ``repro.distributed.sharding``."""
+    lead = tuple(leading)
+    return OnlineState(
+        params=DFRParams(
+            p=lead, q=lead,
+            W=lead + (None, None), b=lead + (None,),
+        ),
+        ridge=RidgeState(
+            A=lead + (None, None), B=lead + (None, None),
+            count=lead,
+            Lt=lead + (None, None), factor_beta=lead,
+        ),
+        step=lead,
+        loss_ema=lead,
+    )
+
+
 def ensemble_logical_axes() -> OnlineState:
     """Logical-axis pytree of an ensemble ``OnlineState`` for the sharding
     rule table: every leaf leads with the ``member`` axis (sharded across
     devices - members are embarrassingly parallel), trailing dims
     replicated.  Feed to ``repro.distributed.sharding.guarded_shardings``.
     """
-    return OnlineState(
-        params=DFRParams(
-            p=("member",), q=("member",),
-            W=("member", None, None), b=("member", None),
-        ),
-        ridge=RidgeState(
-            A=("member", None, None), B=("member", None, None),
-            count=("member",),
-            Lt=("member", None, None), factor_beta=("member",),
-        ),
-        step=("member",),
-        loss_ema=("member",),
-    )
+    return _state_logical_axes("member")
+
+
+def slot_logical_axes() -> OnlineState:
+    """Logical-axis pytree of a slot-batched ``OnlineState`` (the stream
+    server's state tree): every leaf leads with the ``slot`` axis - slots
+    are independent streams, embarrassingly parallel across the serving
+    mesh (``launch.mesh.make_slot_mesh``)."""
+    return _state_logical_axes("slot")
+
+
+def ensemble_slot_logical_axes() -> OnlineState:
+    """Logical-axis pytree for an ensemble-of-slots state (leaves stacked
+    ``(S, K, ...)``): ``slot`` leads, ``member`` second, so a combined
+    ``("slot", "member")`` serving mesh shards both ways at once and the
+    production mesh's uniqueness guard gives ``slot`` the data axes."""
+    return _state_logical_axes("slot", "member")
 
 
 # ---------------------------------------------------------------------------

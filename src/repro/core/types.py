@@ -213,6 +213,19 @@ class WindowState:
             pos=jnp.zeros((), jnp.int32),
         )
 
+    @classmethod
+    def slot_axes(cls) -> "WindowState":
+        """Logical-axes pytree for the slot-batched ring buffers (leaves
+        stacked ``(S, ...)``): ``slot`` leads, everything else replicated.
+        Feed to ``repro.distributed.sharding.guarded_shardings`` - each
+        slot's ring lives wholly on the device that owns the slot (the
+        eviction loop is per-slot, never cross-slot)."""
+        return cls(
+            rows=("slot", None, None),
+            onehot=("slot", None, None),
+            pos=("slot",),
+        )
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -263,6 +276,19 @@ class RequestPool:
             length=jnp.ones((n_slots, capacity), jnp.int32),
             label=jnp.zeros((n_slots, capacity), jnp.int32),
             n=jnp.zeros((n_slots,), jnp.int32),
+        )
+
+    @classmethod
+    def slot_axes(cls) -> "RequestPool":
+        """Logical-axes pytree for the staged pool: ``slot`` leads every
+        leaf, so each device of a slot-sharded serving mesh holds only its
+        own slots' staged payloads and the cursor-indexed window gather
+        inside the sharded step never leaves the device."""
+        return cls(
+            u=("slot", None, None, None),
+            length=("slot", None),
+            label=("slot", None),
+            n=("slot",),
         )
 
 

@@ -9,9 +9,21 @@ resolve to nothing), one pod (data=16, model=16), or multi-pod
 Default placement (MaxText-style FSDP+TP hybrid):
     vocab / heads / kv / mlp / expert_mlp -> "model"   (tensor parallel)
     embed / expert                        -> "data"    (FSDP weight shard)
-    batch / member                        -> ("pod", "data") for activations
-                                             and ensemble member states
+    batch                                 -> ("pod", "data") for activations
+    slot / member                         -> the serving axes (below)
     layers / head_dim / seq / state       -> replicated
+
+Serving axes: the stream server's slot axis and the online ensemble's
+member axis are both embarrassingly parallel, so each rule lists the
+dedicated serving-mesh axis first (``make_slot_mesh`` builds meshes whose
+axes are literally named "slot" / "member") and falls back to the
+production data axes when no serving mesh is active.  On a combined
+``slot x member`` mesh the two logical axes resolve to their own mesh axes
+independently, so a sharded ensemble-of-slots state (leaves leading with
+``("slot", "member", ...)``) shards both ways at once; on the production
+mesh the uniqueness guard lets the leading ``slot`` claim the data axes
+and replicates ``member`` (slots are the coarser unit of serving
+parallelism).
 
 A ``MeshContext`` (set by the launcher) makes ``shard_act`` constraints
 active; without one everything is a no-op so unit tests run untouched.
@@ -43,10 +55,20 @@ DEFAULT_RULES: Rules = {
     "expert": "data",
     "batch": ("pod", "data"),
     # ensemble member axis (repro.core.online.OnlineEnsemble): members are
-    # embarrassingly parallel, so the K axis shards like data; per-member
-    # (A, B)/grad reductions stay *within* a member (no collective over
-    # 'member' - only the batch-sharded online_step psums over data_axes()).
-    "member": ("pod", "data"),
+    # embarrassingly parallel, so the K axis shards over a dedicated
+    # "member" serving-mesh axis when one exists and like data otherwise;
+    # per-member (A, B)/grad reductions stay *within* a member (no
+    # collective over 'member' - only the batch-sharded online_step psums
+    # over data_axes()).
+    "member": ("member", "pod", "data"),
+    # stream-server slot axis (repro.runtime.stream_server.StreamServer):
+    # slots are independent streams - embarrassingly parallel - so the S
+    # axis shards over the dedicated "slot" serving-mesh axis
+    # (launch.mesh.make_slot_mesh) when one exists and over the data axes
+    # otherwise.  Nothing ever reduces over 'slot': admission, refresh
+    # cohorts and retirement are all device-local by construction (the
+    # shard_map'd serving step in runtime.stream_server).
+    "slot": ("slot", "pod", "data"),
     "act_model": "model",
     "kv_alt": "model",
     "layers": None,

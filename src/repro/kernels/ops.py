@@ -214,7 +214,12 @@ def streaming_logits_slots(
     with its own (p, q, W, b); this wrapper owns the slot-axis batching
     contract (one vmapped program over the fused kernel dispatch) so the
     serving loop issues a single call instead of vmapping the public
-    single-system API at every call site."""
+    single-system API at every call site.
+
+    Under the slot-sharded server (``StreamServer(devices=n)``) this runs
+    *inside* ``shard_map``, so S here is the device-LOCAL slot count
+    (global S / n) and the vmap stays collective-free - per-slot batching
+    composes with slot sharding with no change to this wrapper."""
     return jax.vmap(
         lambda j_s, len_s, p_s, q_s, W_s, b_s: streaming_logits(
             j_s, len_s, p_s, q_s, W_s, b_s, n_nodes,

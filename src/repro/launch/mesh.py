@@ -23,3 +23,37 @@ def make_host_mesh(data: Optional[int] = None, model: int = 1):
     if data is None:
         data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_slot_mesh(n_slot: Optional[int] = None, member: int = 1):
+    """Serving mesh for the slot-sharded stream server.
+
+    A 1-D ``("slot",)`` mesh over ``n_slot`` devices (default: all of
+    them), or a 2-D ``("slot", "member")`` mesh when ``member > 1`` (an
+    ensemble-of-slots serving fleet: both axes are embarrassingly
+    parallel).  The axis names are what the ``slot`` / ``member`` logical
+    rules in ``repro.distributed.sharding.DEFAULT_RULES`` resolve to, so
+    ``guarded_spec(..., ("slot", ...))`` shards state trees over this mesh
+    with no extra rule plumbing.
+
+    Uses the first ``n_slot * member`` devices, so a sweep over device
+    counts (the scaling bench) can build 1/2/4/8-device meshes inside one
+    process with ``--xla_force_host_platform_device_count=8``.
+    """
+    avail = jax.device_count()
+    if n_slot is None:
+        n_slot = avail // member
+    need = n_slot * member
+    if need > avail:
+        raise ValueError(
+            f"make_slot_mesh: {n_slot} slot x {member} member devices "
+            f"requested but only {avail} available"
+        )
+    devices = jax.devices()[:need]
+    if member > 1:
+        import numpy as _np
+
+        return jax.sharding.Mesh(
+            _np.asarray(devices).reshape(n_slot, member), ("slot", "member")
+        )
+    return jax.sharding.Mesh(devices, ("slot",))

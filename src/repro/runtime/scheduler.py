@@ -108,6 +108,83 @@ class RefreshCohorts:
         rows, ok = fixed
         return True, rows, ok
 
+    def _sharded_fixed(
+        self, n_shards: int
+    ) -> Tuple[int, Dict[int, Tuple[np.ndarray, np.ndarray]]]:
+        """Per-shard fixed-shape cohort schedules for the slot-sharded
+        server: shard d owns the contiguous global slots
+        ``[d * S/n, (d+1) * S/n)`` and its row lists hold *local* indices,
+        so the shard_map'd refresh branch never indexes (or scatters) off
+        its own device - the device-local invariant.
+
+        Every (cohort, shard) row list is padded to one common width
+        ``r_loc`` (the max over cohorts AND shards, so one jitted program
+        serves every round) with DISTINCT local non-cohort indices flagged
+        ok=False, exactly like the global ``due_rows_fixed`` padding.
+        Returns ``(r_loc, {phase: (rows, ok)})`` where ``rows``/``ok`` are
+        the shard-concatenated ``(n_shards * r_loc,)`` arrays a
+        ``P('slot')`` in_spec splits back into per-shard blocks.
+        """
+        if self.n_slots % n_shards:
+            raise ValueError(
+                f"{self.n_slots} slots not divisible by {n_shards} shards"
+            )
+        s_loc = self.n_slots // n_shards
+        members: Dict[int, list] = {}
+        r_loc = 1
+        for c in range(self.n_cohorts):
+            for d in range(n_shards):
+                local = [i - d * s_loc for i in range(self.n_slots)
+                         if self.cohort_of_slot[i] == c
+                         and d * s_loc <= i < (d + 1) * s_loc]
+                members[(c, d)] = local
+                r_loc = max(r_loc, len(local))
+        fixed: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for c in range(self.n_cohorts):
+            rows_all, ok_all = [], []
+            for d in range(n_shards):
+                rows = list(members[(c, d)])
+                ok = [True] * len(rows)
+                pad_pool = [j for j in range(s_loc) if j not in set(rows)]
+                while len(rows) < r_loc:
+                    rows.append(pad_pool.pop(0) if pad_pool else 0)
+                    ok.append(False)
+                rows_all += rows
+                ok_all += ok
+            fixed[self.offsets[c]] = (
+                np.asarray(rows_all, np.int32), np.asarray(ok_all, bool)
+            )
+        return r_loc, fixed
+
+    def due_rows_fixed_sharded(
+        self, step: int, n_shards: int
+    ) -> Tuple[bool, np.ndarray, np.ndarray]:
+        """``due_rows_fixed`` for a slot axis sharded over ``n_shards``
+        contiguous blocks: same ``(due, rows, ok)`` contract, but ``rows``
+        holds shard-LOCAL indices, ``(n_shards * r_loc,)`` long (shard d's
+        block at ``[d * r_loc, (d+1) * r_loc)``).  The padded rows write
+        their own current values back, so the refreshed slot set - and
+        therefore the served episode - is bitwise the unsharded schedule's.
+        """
+        cache = getattr(self, "_sharded_cache", None)
+        if cache is None:
+            cache = self._sharded_cache = {}
+        hit = cache.get(n_shards)
+        if hit is None:
+            r_loc, fixed = self._sharded_fixed(n_shards)
+            s_loc = self.n_slots // n_shards
+            idle = (
+                np.tile(np.arange(r_loc, dtype=np.int32) % s_loc, n_shards),
+                np.zeros(n_shards * r_loc, bool),
+            )
+            hit = cache[n_shards] = (fixed, idle)
+        fixed, idle = hit
+        phase = step % self.refresh_every
+        got = fixed.get(phase)
+        if got is None:
+            return False, idle[0], idle[1]
+        return True, got[0], got[1]
+
 
 class SlotScheduler:
     """Fixed-capacity slot pool with FIFO admission (continuous batching)."""

@@ -118,6 +118,33 @@ regression-tested bit-for-bit against the synchronous host-staged path):
 ``bench_stream``'s ``pipeline`` table measures the three knobs against the
 PR-4 synchronous host-staged server (see ROADMAP "Landed (PR 5)" for the
 committed numbers).
+
+Slot-sharded serving (PR 6)
+---------------------------
+
+``devices=n`` shards the slot axis over a 1-D ``("slot",)`` device mesh
+(``launch.mesh.make_slot_mesh``; the ``slot`` logical-axis rule in
+``distributed.sharding``): device d owns the contiguous slot block
+``[d * S/n, (d+1) * S/n)``, fixed for the server's lifetime.  Slots are
+independent streams, so the fused pool step runs under ``shard_map`` with
+every per-slot operand - batched ``OnlineState``, ``WindowState`` rings,
+the staged ``RequestPool``, the ``(S,)`` control vectors, and the padded
+refresh-cohort row set (rewritten to shard-local indices by
+``RefreshCohorts.due_rows_fixed_sharded``) - partitioned over ``"slot"``
+and everything else replicated.  The device-local invariant: the hot path
+contains NO cross-device collective; admission resets, the cursor-indexed
+window gather, truncated-BP/accumulation, cohort Ridge refresh and sample
+retirement all touch only the local block, and a live slot never migrates
+between devices.  The ``lax.cond`` gates become per-device predicates
+(``jnp.any`` over the local shard) whose untaken branches are exact
+identities, so a sharded episode is BITWISE the single-device episode
+across every retirement mode and pipeline depth
+(``tests/test_stream_sharded.py``).  Donation, zero-copy staging and the
+fused cohort refresh all survive sharding: payload uploads happen once
+(the owning device keeps the in-place row write, the others drop it), and
+a serving step is still ONE dispatch.  Try it on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (e.g.
+``python examples/online_edge.py --devices 8``).
 """
 from __future__ import annotations
 
@@ -131,6 +158,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import masking, online, ridge
 from repro.core.online import (
@@ -138,9 +167,12 @@ from repro.core.online import (
     init_state,
     online_serve_step,
     refresh_output_batched,
+    slot_logical_axes,
 )
 from repro.core.types import Array, DFRConfig, RequestPool, WindowState
+from repro.distributed import sharding as shardrules
 from repro.kernels import ops
+from repro.launch.mesh import make_slot_mesh
 from repro.runtime.scheduler import RefreshCohorts, SlotScheduler
 
 
@@ -550,6 +582,88 @@ _stream_step_pool_donated = jax.jit(
 )
 
 
+# ---------------------------------------------------------------------------
+# Slot-sharded serving (PR 6): the same fused pool step, shard_map'd over a
+# 1-D ("slot",) device mesh.  Slots are embarrassingly parallel, so every
+# per-slot operand (states / ring buffers / staged pool / control vectors /
+# the padded refresh-cohort row set, rewritten to shard-LOCAL indices by
+# RefreshCohorts.due_rows_fixed_sharded) shards over "slot" and every scalar
+# or shared operand replicates - the body contains NO collective: admission,
+# the cursor gather, the serve step, cohort refresh and retirement all act
+# on the device-local slot block.  The lax.cond gates inside _step_core
+# become per-device predicates (jnp.any over the local shard); an untaken
+# branch is the exact identity, so the sharded episode is BITWISE the
+# single-device episode (tests/test_stream_sharded.py holds this across
+# device counts, retirement modes and pipeline depths).  Donation flows
+# through jit(shard_map): out_specs match the donated operands' shardings,
+# so the (S/n, s, s) factor buffers still update in place per device.
+# ---------------------------------------------------------------------------
+
+_SLOT, _REP = P("slot"), P()
+# operand order of _stream_step_pool_impl after cfg:
+#   mask, states, fresh, fresh_mask, pool, cursor, live, lr, phase_steps,
+#   beta, forget, win, refresh_due, refresh_rows, refresh_ok
+_POOL_IN_SPECS = (_REP, _SLOT, _REP, _SLOT, _SLOT, _SLOT, _SLOT, _REP,
+                  _REP, _REP, _REP, _SLOT, _REP, _SLOT, _SLOT)
+_POOL_OUT_SPECS = (_SLOT, _SLOT, _SLOT)      # states, win, preds
+_SHARDED_STEP_CACHE: Dict[Tuple, object] = {}
+_SHARDED_WRITE_CACHE: Dict[Mesh, object] = {}
+
+
+def _sharded_pool_step(mesh: Mesh, cfg: DFRConfig, donate: bool, **statics):
+    """jit(shard_map(_stream_step_pool_impl)) for this mesh/config, cached
+    module-level so servers (and the bench's device-count sweep) share
+    executables.  Donation mirrors the unsharded twin: states (operand 1)
+    and win (operand 11) update in place."""
+    key = (mesh, cfg, donate, tuple(sorted(statics.items())))
+    hit = _SHARDED_STEP_CACHE.get(key)
+    if hit is None:
+        body = shard_map(
+            partial(_stream_step_pool_impl, cfg, **statics),
+            mesh=mesh, in_specs=_POOL_IN_SPECS, out_specs=_POOL_OUT_SPECS,
+            check_rep=False,
+        )
+        hit = _SHARDED_STEP_CACHE[key] = jax.jit(
+            body, donate_argnums=(1, 11) if donate else ()
+        )
+    return hit
+
+
+def _pool_write_sharded_impl(
+    pool: RequestPool, i: Array, u: Array, length: Array, label: Array,
+    n: Array,
+) -> RequestPool:
+    """Per-shard body of the sharded admission write: the payload arrives
+    replicated, the one device owning global row ``i`` (contiguous blocks
+    of S/n slots) writes it into its local block, everyone else drops the
+    scatter (out-of-range index + mode='drop') - no collective, and the
+    owning device's write is the same in-place donated row write as the
+    unsharded path."""
+    s_loc = pool.n.shape[0]
+    li = i - jax.lax.axis_index("slot") * s_loc
+    li = jnp.where((li >= 0) & (li < s_loc), li, s_loc)
+    return RequestPool(
+        u=pool.u.at[li].set(u, mode="drop"),
+        length=pool.length.at[li].set(length, mode="drop"),
+        label=pool.label.at[li].set(label, mode="drop"),
+        n=pool.n.at[li].set(n, mode="drop"),
+    )
+
+
+def _sharded_pool_write(mesh: Mesh):
+    hit = _SHARDED_WRITE_CACHE.get(mesh)
+    if hit is None:
+        body = shard_map(
+            _pool_write_sharded_impl, mesh=mesh,
+            in_specs=(_SLOT, _REP, _REP, _REP, _REP, _REP),
+            out_specs=_SLOT, check_rep=False,
+        )
+        hit = _SHARDED_WRITE_CACHE[mesh] = jax.jit(
+            body, donate_argnums=(0,)
+        )
+    return hit
+
+
 def _pool_write_impl(
     pool: RequestPool, i: Array, u: Array, length: Array, label: Array,
     n: Array,
@@ -677,6 +791,10 @@ class StreamServer:
         rounded up to a window multiple).  Leave None to let it grow to the
         largest submitted stream (each growth re-specializes the jitted
         gather, so pre-sizing is worth it when stream lengths are known).
+      * ``devices=n`` - shard the slot axis over the first n devices
+        (``S % n == 0``, ``staging='device'``; see the module docstring's
+        slot-sharding section).  Bitwise the devices=1 episode; scales
+        served-samples/sec with the device count (BENCH_stream_sharded).
     """
 
     def __init__(
@@ -701,6 +819,7 @@ class StreamServer:
         donate: bool = True,
         pool_capacity: Optional[int] = None,
         latency_window: int = 4096,
+        devices: int = 1,
     ):
         if refresh_mode not in ("recompute", "incremental"):
             raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
@@ -729,6 +848,20 @@ class StreamServer:
             raise ValueError(
                 f"latency_window must be >= 1, got {latency_window!r}"
             )
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices!r}")
+        if devices > 1:
+            if staging != "device":
+                raise ValueError(
+                    "slot sharding (devices > 1) requires staging='device' "
+                    "(the host-staged batch build re-uploads per step and "
+                    "would serialize through one device)"
+                )
+            if max_streams % devices:
+                raise ValueError(
+                    f"max_streams={max_streams} must be divisible by "
+                    f"devices={devices} (contiguous equal slot blocks)"
+                )
         self.cfg = cfg
         self.t_max = int(t_max)
         self.max_streams = int(max_streams)
@@ -793,6 +926,32 @@ class StreamServer:
             self.pool = RequestPool.zeros(
                 self.max_streams, cap, self.t_max, cfg.n_in, cfg.dtype
             )
+        # slot sharding (devices > 1): a 1-D ("slot",) mesh owning
+        # contiguous blocks of S/devices slots per device.  Every per-slot
+        # tree is placed device-local ONCE here (via the 'slot' logical-axis
+        # rule in repro.distributed.sharding) and the shard_map'd step keeps
+        # it there - a slot never migrates between devices for its lifetime
+        # (tests/test_stream_sharded.py's placement property).
+        self.devices = int(devices)
+        self.mesh: Optional[Mesh] = None
+        if self.devices > 1:
+            self.mesh = make_slot_mesh(self.devices)
+
+            def _place(tree, axes):
+                return jax.device_put(
+                    tree,
+                    shardrules.guarded_shardings(
+                        jax.eval_shape(lambda: tree), axes, mesh=self.mesh
+                    ),
+                )
+
+            self.states = _place(self.states, slot_logical_axes())
+            if self.win is not None:
+                self.win = _place(self.win, WindowState.slot_axes())
+            self.pool = _place(self.pool, RequestPool.slot_axes())
+            rep = NamedSharding(self.mesh, P())
+            self.mask = jax.device_put(self.mask, rep)
+            self._fresh_row = jax.device_put(self._fresh_row, rep)
         self._admitted_this_step: List[int] = []
         # steady-state control vectors change rarely: cache their device
         # copies so a typical step uploads only the (S,) cursor (the
@@ -846,6 +1005,16 @@ class StreamServer:
             label=jnp.pad(self.pool.label, ((0, 0), (0, pad))),
             n=self.pool.n,
         )
+        if self.mesh is not None:
+            # growth pads the (replicated-direction) capacity axis; re-pin
+            # the grown pool to its canonical slot sharding (rare path)
+            self.pool = jax.device_put(
+                self.pool,
+                shardrules.guarded_shardings(
+                    jax.eval_shape(lambda: self.pool),
+                    RequestPool.slot_axes(), mesh=self.mesh,
+                ),
+            )
 
     def submit(self, req: StreamRequest) -> None:
         if req.u.shape[1] != self.t_max:
@@ -871,7 +1040,9 @@ class StreamServer:
                 self._stage_request(req)
                 staged = self._staged.pop(id(req))
             u, length, label, n, _ = staged
-            self.pool = _pool_write(
+            write = (_sharded_pool_write(self.mesh) if self.mesh is not None
+                     else _pool_write)
+            self.pool = write(
                 self.pool, jnp.asarray(i, jnp.int32), u, length, label, n
             )
 
@@ -895,7 +1066,14 @@ class StreamServer:
         phase = step % self.refresh_every
         hit = self._due_cache.get(phase)
         if hit is None:
-            due, rows, ok = self.cohorts.due_rows_fixed(step)
+            if self.devices > 1:
+                # shard-local row indices, one fixed-width block per device
+                # (the P('slot') in_spec hands each device its own block)
+                due, rows, ok = self.cohorts.due_rows_fixed_sharded(
+                    step, self.devices
+                )
+            else:
+                due, rows, ok = self.cohorts.due_rows_fixed(step)
             hit = self._due_cache[phase] = (
                 jnp.asarray(due), jnp.asarray(rows), jnp.asarray(ok)
             )
@@ -936,16 +1114,29 @@ class StreamServer:
         )
         if self.staging == "device":
             due, rows, ok = self._cached_due(self.global_step + 1)
-            step_fn = (_stream_step_pool_donated if self.donate
-                       else _stream_step_pool)
-            self.states, self.win, preds = step_fn(
-                self.cfg, self.mask, self.states, self._fresh_row,
-                self._cached_mask(fresh_mask), self.pool,
-                jnp.asarray(self.slot_pos.astype(np.int32)),
-                self._cached_mask(live), self.lr, self.phase_steps,
-                self.beta, self.forget, self.win, due, rows, ok,
-                refresh_mode=self.refresh_mode, window=W, **step_kw,
-            )
+            if self.mesh is not None:
+                step_fn = _sharded_pool_step(
+                    self.mesh, self.cfg, self.donate,
+                    refresh_mode=self.refresh_mode, window=W, **step_kw,
+                )
+                self.states, self.win, preds = step_fn(
+                    self.mask, self.states, self._fresh_row,
+                    self._cached_mask(fresh_mask), self.pool,
+                    jnp.asarray(self.slot_pos.astype(np.int32)),
+                    self._cached_mask(live), self.lr, self.phase_steps,
+                    self.beta, self.forget, self.win, due, rows, ok,
+                )
+            else:
+                step_fn = (_stream_step_pool_donated if self.donate
+                           else _stream_step_pool)
+                self.states, self.win, preds = step_fn(
+                    self.cfg, self.mask, self.states, self._fresh_row,
+                    self._cached_mask(fresh_mask), self.pool,
+                    jnp.asarray(self.slot_pos.astype(np.int32)),
+                    self._cached_mask(live), self.lr, self.phase_steps,
+                    self.beta, self.forget, self.win, due, rows, ok,
+                    refresh_mode=self.refresh_mode, window=W, **step_kw,
+                )
             self.global_step += 1
         else:
             # PR-4 host staging: rebuild + upload the padded window batch

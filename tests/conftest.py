@@ -5,6 +5,19 @@ import sys
 # a separate process).  Keep XLA quiet and single-threaded-friendly.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Multi-device lane: REPRO_FORCE_DEVICES=N splits the host CPU into N XLA
+# devices BEFORE jax initializes (device counts lock on first jax import),
+# so the slot-sharding parity tests (tests/test_stream_sharded.py) exercise
+# real multi-device meshes on CPU-only CI.  Unset, tests run exactly as
+# before on the single default device; the sharded tests that need devices
+# skip (and a subprocess fallback re-runs them with the flag set).
+_force = os.environ.get("REPRO_FORCE_DEVICES")
+if _force:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_force)}"
+    ).strip()
+
 import jax
 import jax.numpy as jnp
 import numpy as np

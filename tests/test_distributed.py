@@ -167,6 +167,78 @@ def test_ensemble_logical_axes_cover_state():
         assert len(ax) == leaf.ndim
 
 
+def test_slot_axis_rule_resolution():
+    """The 'slot' logical axis prefers a dedicated serving-mesh axis, falls
+    back to the production data axes, and replicates when indivisible."""
+
+    class SlotMesh:
+        axis_names = ("slot",)
+        shape = {"slot": 8}
+
+    class ProdMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 2}
+
+    rules = dict(shd.DEFAULT_RULES)
+    # serving mesh: S=64 divisible by 8 -> sharded over "slot"
+    spec = shd.guarded_spec((64, 57, 57), ("slot", None, None),
+                            SlotMesh(), rules)
+    assert spec == P("slot", None, None)
+    # production mesh (no "slot" axis): falls back to the data axes
+    spec = shd.guarded_spec((64, 57, 57), ("slot", None, None),
+                            ProdMesh(), rules)
+    assert spec == P(("pod", "data"), None, None)
+    # indivisible slot count -> replicated (guard, not an error)
+    spec = shd.guarded_spec((6,), ("slot",), SlotMesh(), rules)
+    assert spec == P(None)
+
+
+def test_combined_slot_member_spec():
+    """An ensemble-of-slots state ((S, K, ...) leaves) on a 2-D serving
+    mesh shards slot AND member at once; on the production mesh the
+    uniqueness guard gives 'slot' the data axes and replicates 'member'."""
+
+    class SlotMemberMesh:
+        axis_names = ("slot", "member")
+        shape = {"slot": 4, "member": 2}
+
+    class ProdMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 2}
+
+    rules = dict(shd.DEFAULT_RULES)
+    spec = shd.guarded_spec((8, 4, 57, 57), ("slot", "member", None, None),
+                            SlotMemberMesh(), rules)
+    assert spec == P("slot", "member", None, None)
+    spec = shd.guarded_spec((8, 8, 57, 57), ("slot", "member", None, None),
+                            ProdMesh(), rules)
+    assert spec == P(("pod", "data"), None, None, None)
+
+
+def test_slot_logical_axes_cover_state():
+    """slot_logical_axes() / ensemble_slot_logical_axes() mirror the
+    OnlineState tree leaf-for-leaf with 'slot' leading (and 'member'
+    second for the ensemble-of-slots variant)."""
+    from repro.core.online import (
+        ensemble_slot_logical_axes, init_state, slot_logical_axes,
+    )
+    from repro.core.types import DFRConfig
+
+    cfg = DFRConfig(n_in=2, n_classes=3, n_nodes=6)
+    state = init_state(cfg)
+    state_leaves, state_def = jax.tree_util.tree_flatten(state)
+    for axes_tree, lead in ((slot_logical_axes(), ("slot",)),
+                            (ensemble_slot_logical_axes(),
+                             ("slot", "member"))):
+        axes_leaves, axes_def = jax.tree_util.tree_flatten(
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+        assert state_def == axes_def
+        for leaf, ax in zip(state_leaves, axes_leaves):
+            assert ax[:len(lead)] == lead
+            # batching stacks len(lead) leading dims onto each leaf
+            assert len(ax) == leaf.ndim + len(lead)
+
+
 def test_online_step_psum_matches_unsharded():
     """online_step(axis_names=('data',)) inside shard_map over a 1-device
     data mesh reproduces the plain step exactly ((A, B)/grad sums are

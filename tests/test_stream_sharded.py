@@ -1,0 +1,366 @@
+"""Slot-sharded stream serving (PR 6): bitwise-parity + placement battery.
+
+The contract under test (see runtime/stream_server.py, "Slot-sharded
+serving"): ``StreamServer(devices=n)`` shards the slot axis over a 1-D
+("slot",) mesh and serves episodes BITWISE identical to the single-device
+server - across every retirement mode (none/forget/window), pipeline
+depths 0/1/2, staggered refresh cohorts, mid-service pool growth and
+continuous admission/retire churn.  The tests also pin the device-local
+invariant structurally: state trees stay P("slot")-sharded across steps, a
+live slot never migrates between devices, and the per-device refresh work
+is bounded by the cohort size.
+
+Multi-device tests need >= 8 XLA devices.  The conftest honors
+``REPRO_FORCE_DEVICES=8`` (forcing ``--xla_force_host_platform_device_
+count`` before jax initializes), which the CI sharded lane sets; a plain
+single-device tier-1 run still executes the battery through the slow
+subprocess fallback at the bottom, and the scheduler/placement property
+tests are host-only and always run.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic grid variants below still run
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="hypothesis not installed (CI property lane installs it); the "
+           "deterministic grid variants cover the same invariants",
+)
+
+from repro.core.types import DFRConfig
+from repro.runtime import StreamRequest, StreamServer
+from repro.runtime.scheduler import RefreshCohorts, SlotScheduler
+
+NDEV = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    NDEV < 8, reason="needs 8 XLA devices (REPRO_FORCE_DEVICES=8); the "
+                     "subprocess fallback covers the single-device run"
+)
+
+CFG = DFRConfig(n_in=2, n_classes=3, n_nodes=6)
+
+RETIREMENT_MODES = (
+    ("none", {"refresh_mode": "incremental"}),
+    ("forget", {"refresh_mode": "incremental", "retirement": "forget",
+                "forget": 0.9}),
+    ("window", {"refresh_mode": "incremental", "retirement": "window",
+                "retire_window": 6}),
+)
+
+
+def _make_stream(rid, n, t=10, seed=0):
+    r = np.random.default_rng(seed)
+    return StreamRequest(
+        rid=rid,
+        u=r.normal(size=(n, t, CFG.n_in)).astype(np.float32),
+        length=r.integers(3, t + 1, n).astype(np.int32),
+        label=r.integers(0, CFG.n_classes, n).astype(np.int32),
+    )
+
+
+def _episode_streams(seed0=0):
+    """More streams than slots, ragged lengths: admission, tail windows,
+    retirement and refill all fire."""
+    return [_make_stream(i, n, seed=seed0 + i)
+            for i, n in enumerate([7, 5, 9, 4, 6, 8, 5, 4, 7, 6, 5, 9])]
+
+
+def _serve(devices, depth=0, cohorts=1, streams=None, **kw):
+    srv = StreamServer(CFG, t_max=10, max_streams=8, window=2,
+                      phase_steps=3, refresh_every=4,
+                      refresh_cohorts=cohorts, pipeline_depth=depth,
+                      devices=devices, **kw)
+    for s in (streams if streams is not None else _episode_streams()):
+        srv.submit(s)
+    done = srv.run_until_drained()
+    return {r.rid: list(r.preds) for r in done}, srv
+
+
+def _assert_bitwise(sa, sb):
+    for a, b in zip(jax.tree_util.tree_leaves(sa),
+                    jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+_BASELINES = {}
+
+
+def _baseline(mode, kw):
+    """devices=1 depth-0 episode, computed once per retirement mode."""
+    if mode not in _BASELINES:
+        _BASELINES[mode] = _serve(1, **kw)
+    return _BASELINES[mode]
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: device counts x retirement modes x pipeline depths
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("mode,kw", RETIREMENT_MODES,
+                         ids=[m for m, _ in RETIREMENT_MODES])
+@pytest.mark.parametrize("devices", [2, 4, 8])
+def test_sharded_episode_is_bitwise_single_device(devices, mode, kw):
+    """The shard_map'd fused step serves the full admission/retire episode
+    bit-for-bit like devices=1: predictions, the final batched state AND
+    every retirement snapshot match exactly (the per-device cond gates are
+    exact identities when untaken)."""
+    preds_1, srv_1 = _baseline(mode, kw)
+    preds_n, srv_n = _serve(devices, **kw)
+    assert preds_1 == preds_n
+    _assert_bitwise(srv_1.states, srv_n.states)
+    if srv_1.win is not None:
+        _assert_bitwise(srv_1.win, srv_n.win)
+    for a, b in zip(sorted(srv_1.completed, key=lambda r: r.rid),
+                    sorted(srv_n.completed, key=lambda r: r.rid)):
+        assert a.correct == b.correct and b.done
+        _assert_bitwise(a.final_state, b.final_state)
+        for leaf in jax.tree_util.tree_leaves(b.final_state):
+            assert np.all(np.isfinite(np.asarray(leaf, np.float64)))
+
+
+@needs_devices
+@pytest.mark.parametrize("mode,kw", RETIREMENT_MODES,
+                         ids=[m for m, _ in RETIREMENT_MODES])
+@pytest.mark.parametrize("depth", [1, 2])
+def test_sharded_pipelined_is_bitwise_synchronous(depth, mode, kw):
+    """Async pipelining composes with sharding: 8-device depth-1/2 episodes
+    equal the single-device depth-0 schedule bit-for-bit (the lag-D ring
+    defers only bookkeeping, sharded or not)."""
+    preds_1, srv_1 = _baseline(mode, kw)
+    preds_d, srv_d = _serve(8, depth=depth, **kw)
+    assert preds_1 == preds_d
+    _assert_bitwise(srv_1.states, srv_d.states)
+
+
+@needs_devices
+def test_sharded_staggered_cohorts_match():
+    """Uneven refresh cohorts (C=3 over 8 slots: per-shard row lists need
+    cross-shard padding to a common width) refresh the exact same slots on
+    the exact same steps as the unsharded schedule."""
+    for devices in (2, 8):
+        preds_1, srv_1 = _serve(1, cohorts=3)
+        preds_n, srv_n = _serve(devices, cohorts=3)
+        assert preds_1 == preds_n
+        _assert_bitwise(srv_1.states, srv_n.states)
+
+
+@needs_devices
+def test_sharded_pool_growth_mid_service():
+    """A longer stream submitted mid-episode grows the staged pool; the
+    re-pinned sharded pool keeps serving exactly (vs devices=1 under the
+    same submission schedule)."""
+    def run(devices):
+        srv = StreamServer(CFG, t_max=10, max_streams=4, window=2,
+                          phase_steps=2, refresh_every=3, devices=devices)
+        for s in _episode_streams()[:4]:
+            srv.submit(s)
+        for _ in range(2):
+            srv.step()
+        srv.submit(_make_stream(99, 13, seed=42))   # forces _grow_pool
+        done = srv.run_until_drained()
+        return {r.rid: list(r.preds) for r in done}, srv
+
+    preds_1, srv_1 = run(1)
+    preds_4, srv_4 = run(4)
+    assert srv_4.pool.capacity == srv_1.pool.capacity > 10
+    assert preds_1 == preds_4
+    _assert_bitwise(srv_1.states, srv_4.states)
+
+
+# ---------------------------------------------------------------------------
+# Placement: the device-local invariant, structurally
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+def test_sharded_state_trees_stay_slot_sharded():
+    """Every per-slot tree is NamedSharding-P('slot') after init AND after
+    serving steps (out_specs pin it), the replicated operands replicate,
+    and each device holds exactly its contiguous S/n slot block."""
+    srv = StreamServer(CFG, t_max=10, max_streams=8, window=2,
+                      phase_steps=2, refresh_every=3, devices=8,
+                      refresh_mode="incremental", retirement="window",
+                      retire_window=4)
+    for s in _episode_streams()[:6]:
+        srv.submit(s)
+    for _ in range(3):
+        srv.step()
+    srv.drain()
+    mesh = srv.mesh
+    assert mesh.axis_names == ("slot",) and mesh.size == 8
+    slot_sh = NamedSharding(mesh, P("slot"))
+    for tree in (srv.states, srv.win, srv.pool):
+        for leaf in jax.tree_util.tree_leaves(tree):
+            assert leaf.sharding.is_equivalent_to(slot_sh, leaf.ndim), leaf
+    assert srv.mask.sharding.is_equivalent_to(
+        NamedSharding(mesh, P()), srv.mask.ndim)
+    # contiguous ownership: shard d of the (S,) step counter is slot d
+    shards = sorted(srv.states.step.addressable_shards,
+                    key=lambda sh: sh.device.id)
+    assert [sh.index for sh in shards] == [
+        (slice(d, d + 1),) for d in range(8)
+    ]
+
+
+def test_sharded_validation():
+    """Misconfigurations fail fast: host staging, indivisible S, devices<1
+    (all raised before any mesh is built)."""
+    with pytest.raises(ValueError, match="staging='device'"):
+        StreamServer(CFG, t_max=10, devices=2, staging="host")
+    with pytest.raises(ValueError, match="divisible"):
+        StreamServer(CFG, t_max=10, max_streams=6, devices=4)
+    with pytest.raises(ValueError, match="devices"):
+        StreamServer(CFG, t_max=10, devices=0)
+
+
+# ---------------------------------------------------------------------------
+# Host-only properties: placement never migrates, refresh work is bounded
+# ---------------------------------------------------------------------------
+
+
+def _check_no_migration(rng, n_slots, n_shards, n_ops):
+    """Random admit/retire schedule: a request's slot index - hence its
+    owning device, the fixed map slot // (S/n) - never changes while the
+    request is live."""
+    s_loc = n_slots // n_shards
+    sched = SlotScheduler(n_slots)
+    placed = {}          # rid -> (slot, device) at admission
+    next_rid = 0
+    for _ in range(n_ops):
+        op = rng.choice(["submit", "admit", "retire"])
+        if op == "submit":
+            sched.submit(next_rid)
+            next_rid += 1
+        elif op == "admit":
+            sched.admit(lambda i, rid: placed.setdefault(
+                rid, (i, i // s_loc)))
+        else:
+            live = sched.live()
+            if live:
+                i, rid = live[int(rng.integers(len(live)))]
+                sched.retire(i)
+                del placed[rid]
+        for i, rid in sched.live():
+            slot0, dev0 = placed[rid]
+            assert i == slot0 and i // s_loc == dev0
+
+
+def _check_cohort_schedule(n_slots, refresh_every, n_cohorts, n_shards):
+    """The shard-local refresh schedule is the unsharded schedule, re-based:
+    same due steps, local rows in range and distinct per shard, the union
+    of ok'd global ids is exactly the due cohort, and per-device refresh
+    work is bounded by the local cohort size ceil(S/n / C)."""
+    s_loc = n_slots // n_shards
+    coh = RefreshCohorts(n_slots, refresh_every, n_cohorts)
+    c_eff = coh.n_cohorts
+    for step in range(refresh_every):
+        due_g, _, _ = coh.due_rows_fixed(step)
+        due_s, rows, ok = coh.due_rows_fixed_sharded(step, n_shards)
+        assert due_s == due_g
+        assert rows.shape == ok.shape and rows.shape[0] % n_shards == 0
+        r_loc = rows.shape[0] // n_shards
+        global_ok = set()
+        for d in range(n_shards):
+            blk = rows[d * r_loc:(d + 1) * r_loc]
+            okb = ok[d * r_loc:(d + 1) * r_loc]
+            assert ((blk >= 0) & (blk < s_loc)).all()
+            assert len(set(blk.tolist())) == r_loc   # scatter-safe
+            assert int(okb.sum()) <= -(-s_loc // c_eff)
+            global_ok |= {d * s_loc + int(j) for j, o in zip(blk, okb) if o}
+        expect = coh.due_slots(step)
+        assert global_ok == set(expect if due_g else [])
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_property_live_slot_never_changes_device(data):
+        n_slots = data.draw(st.sampled_from([4, 8, 16]), label="n_slots")
+        n_shards = data.draw(
+            st.sampled_from([d for d in (1, 2, 4, 8) if n_slots % d == 0]),
+            label="n_shards")
+        seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+        n_ops = data.draw(st.integers(4, 30), label="ops")
+        _check_no_migration(
+            np.random.default_rng(seed), n_slots, n_shards, n_ops)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n_slots=st.sampled_from([4, 8, 16, 24]),
+        refresh_every=st.integers(1, 12),
+        n_cohorts=st.integers(1, 6),
+        n_shards=st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_property_sharded_cohort_schedule(n_slots, refresh_every,
+                                              n_cohorts, n_shards):
+        if n_slots % n_shards:
+            n_shards = 1
+        _check_cohort_schedule(n_slots, refresh_every, n_cohorts, n_shards)
+
+
+def test_grid_live_slot_never_changes_device():
+    """Deterministic variant of the migration property (runs with or
+    without hypothesis): 24 random schedules across shard widths."""
+    for n_slots, n_shards in ((4, 1), (4, 2), (8, 4), (8, 8), (16, 4)):
+        for seed in range(5):
+            _check_no_migration(
+                np.random.default_rng(1000 * n_slots + seed),
+                n_slots, n_shards, n_ops=25)
+
+
+def test_grid_sharded_cohort_schedule():
+    """Deterministic variant of the schedule property: the full small grid
+    of slots x period x cohorts x shards."""
+    for n_slots in (4, 8, 16, 24):
+        for refresh_every in (1, 3, 5, 8):
+            for n_cohorts in (1, 2, 3, 5):
+                for n_shards in (1, 2, 4, 8):
+                    if n_slots % n_shards:
+                        continue
+                    _check_cohort_schedule(
+                        n_slots, refresh_every, n_cohorts, n_shards)
+
+
+def test_sharded_cohort_schedule_rejects_indivisible():
+    with pytest.raises(ValueError, match="divisible"):
+        RefreshCohorts(6, 4, 2).due_rows_fixed_sharded(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Single-device fallback: run the battery under a forced-8-device subprocess
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(NDEV >= 8, reason="battery already ran in-process")
+def test_forced_lane_subprocess():
+    """Plain tier-1 runs (one device) still execute the full sharded parity
+    battery: re-run this file's device-gated tests in a subprocess with
+    REPRO_FORCE_DEVICES=8 (the conftest forces the XLA flag pre-init)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "tests/test_stream_sharded.py",
+         "-q", "-k", "sharded_", "-p", "no:cacheprovider"],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "JAX_PLATFORMS": "cpu", "HOME": os.environ.get("HOME", "/root"),
+             "REPRO_FORCE_DEVICES": "8"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, (out.stdout[-2000:] + out.stderr[-2000:])
+    assert "passed" in out.stdout
