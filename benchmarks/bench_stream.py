@@ -78,13 +78,31 @@ Fifth table (ISSUE 6, ``--sharded``): served-samples/sec vs slot-mesh
 device count (1/2/4/8) at Nx in {8, 16} x S in {64, 256}, window=1.  The
 sharded episodes are bitwise the single-device episodes, so the columns
 measure pure serving-harness scaling.  Tracked in BENCH_stream_sharded.json
-(written by ``benchmarks/run.py --only stream_sharded``).  On hosts with
-fewer physical cores than mesh devices the forced-device sweep measures
-sharding *overhead*, not speedup - the rows record ``host_cores`` so the
-trajectory stays interpretable.
+(written by ``benchmarks/run.py --only stream_sharded``).  Columns where
+the mesh has more devices than the host has physical cores
+(``os.cpu_count()``) are flagged ``dN_oversubscribed`` and report an
+``dN_overhead_ratio`` instead of a ``dN_speedup``: forced host-device
+splits time-slice the shared cores, so those numbers measure sharding
+*overhead*, never speedup - PR 6 recorded them under the speedup name,
+which made the mistake easy to repeat.
+
+Sixth table (ISSUE 7, ``--quant``): the int8 quantized serving fast path
+plus multi-sample step blocking vs the fp32 baseline, at identical
+protocols (PR-5 paired discipline: same streams, round-robin episodes,
+best-of-reps per policy).  Columns: served-samples/sec for
+fp32 / int8 / fp32+block / int8+block, int8-vs-fp32 argmax agreement on
+the same episode, per-slot serving-readout bytes (int8 codes + scales vs
+fp32 weights - the deterministic >= 3x memory acceptance axis), and
+optimized-HLO per-step FLOPs/bytes for both serving programs (from
+``launch/hlo_cost``, host-noise independent).  A second row kind
+(``quant-drift``) serves the NARMA10 piecewise-drift fixture under both
+paths and reports the pre/at/post accuracy band plus deltas - the honest
+accuracy cost of int8.  Tracked in BENCH_stream_quant.json (written by
+``benchmarks/run.py --only stream_quant``).
 
     PYTHONPATH=src python benchmarks/bench_stream.py [--smoke|--full]
     PYTHONPATH=src python benchmarks/bench_stream.py --sharded [--json]
+    PYTHONPATH=src python benchmarks/bench_stream.py --quant [--json]
 """
 from __future__ import annotations
 
@@ -443,6 +461,56 @@ def _bench_drift_case(
 
 
 # ---------------------------------------------------------------------------
+# Per-step HLO cost (launch/hlo_cost): program FLOPs/bytes, not wall-clock
+# ---------------------------------------------------------------------------
+
+
+def _infer_step_cost(n_nodes: int, n_classes: int, n_streams: int,
+                     window: int, t_len: int,
+                     quantize: str = "none") -> Dict[str, float]:
+    """Optimized-HLO cost of one fused serving-logits dispatch.
+
+    Lowers the slot-batched streaming-logits program (the per-step serving
+    compute: S slots x W windows of T reservoir steps + the readout
+    contraction) and walks the compiled HLO with ``launch/hlo_cost`` -
+    exact loop-aware dot FLOPs and HBM bytes.  Unlike the samples/sec
+    columns this is host-noise independent.
+
+    Read fp32-vs-int8 with care: the cost model counts dot/conv FLOPs
+    only (its documented scope), and the int8 program expresses the ring
+    recurrence as per-step int8 dots while the fp32 program keeps it
+    elementwise (invisible to the model).  The columns are therefore
+    per-program absolute costs for trend tracking, NOT a cross-path
+    speedup ratio.
+    """
+    import functools
+
+    from repro.kernels import ops
+    from repro.launch import hlo_cost
+
+    S, W, T, Nx = n_streams, window, t_len, n_nodes
+    nr = Nx * (Nx + 1)
+    j = jnp.zeros((S, W, T, Nx), jnp.float32)
+    lengths = jnp.full((S, W), T, jnp.int32)
+    p = jnp.full((S,), 0.5, jnp.float32)
+    q = jnp.full((S,), 0.4, jnp.float32)
+    b = jnp.zeros((S, n_classes), jnp.float32)
+    if quantize == "int8":
+        wq = jnp.zeros((S, n_classes, nr), jnp.int8)
+        sc = jnp.full((S,), 0.01, jnp.float32)
+        fn = jax.jit(functools.partial(
+            ops.streaming_logits_slots_q8, n_nodes=Nx))
+        lowered = fn.lower(j, lengths, p, q, wq, sc, sc, b)
+    else:
+        wf = jnp.zeros((S, n_classes, nr), jnp.float32)
+        fn = jax.jit(functools.partial(
+            ops.streaming_logits_slots, n_nodes=Nx))
+        lowered = fn.lower(j, lengths, p, q, wf, b)
+    cost = hlo_cost.analyze(lowered.compile().as_text())
+    return {"flops": cost.flops, "mem_bytes": cost.mem_bytes}
+
+
+# ---------------------------------------------------------------------------
 # Sharded table (ISSUE 6): served-samples/sec vs slot-mesh device count
 # ---------------------------------------------------------------------------
 
@@ -460,12 +528,15 @@ def _bench_sharded_case(n_streams: int, n_samples: int, t_len: int,
     every column serves exactly the same computation - the table measures
     the scaling of the serving harness alone.
 
-    Honest caveat, recorded in the row: with
+    Honest caveat, enforced per column: with
     ``--xla_force_host_platform_device_count`` the "devices" share the
-    host's physical cores (``host_cores``).  On a machine with fewer cores
-    than mesh devices the sweep measures sharding *overhead* (per-device
-    dispatch on a shared core), not speedup - the speedup column needs
-    cores >= devices (or real accelerators) to show scaling.
+    host's physical cores (``host_cores = os.cpu_count()``).  A column
+    with more mesh devices than physical cores measures sharding
+    *overhead* (per-device dispatch on a time-sliced core), not speedup -
+    such columns are flagged ``dN_oversubscribed`` and their ratio is
+    emitted as ``dN_overhead_ratio``, never ``dN_speedup``, so the tracked
+    JSON cannot present overhead as a scaling datapoint.  A real speedup
+    column needs cores >= devices (or real accelerators).
     """
     cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=n_nodes)
     phase_steps, refresh_every = 4, 5
@@ -496,10 +567,17 @@ def _bench_sharded_case(n_streams: int, n_samples: int, t_len: int,
             t, _ = run_once()
             best = t if best is None or t < best else best
         row[f"d{nd}_samples_per_s"] = round(total_samples / best, 1)
+        if nd > (os.cpu_count() or 1):
+            row[f"d{nd}_oversubscribed"] = True
         if base_time is None:
             base_time = best
+        elif f"d{nd}_oversubscribed" in row:
+            row[f"d{nd}_overhead_ratio"] = round(base_time / best, 2)
         else:
             row[f"d{nd}_speedup"] = round(base_time / best, 2)
+    cost = _infer_step_cost(n_nodes, 4, n_streams, window, t_len)
+    row["infer_flops_per_step"] = cost["flops"]
+    row["infer_mem_bytes_per_step"] = cost["mem_bytes"]
     return row
 
 
@@ -540,6 +618,162 @@ def run_sharded(full: bool = False, smoke: bool = False) -> List[Dict]:
         return [json.loads(line) for line in out.stdout.splitlines()
                 if line.startswith("{")]
     return [_bench_sharded_case(*c, device_counts=counts) for c in cases]
+
+
+# ---------------------------------------------------------------------------
+# Quant table (ISSUE 7): int8 serving fast path + multi-sample step blocking
+# ---------------------------------------------------------------------------
+
+QUANT_POLICIES: Tuple[Tuple[str, Dict], ...] = (
+    ("fp32", {}),                                        # the PR-6 fast path
+    ("int8", {"quantize": "int8"}),
+    ("fp32_b4", {"step_block": 4}),
+    ("int8_b4", {"quantize": "int8", "step_block": 4}),
+)
+
+
+def _bench_quant_case(n_streams: int, n_samples: int, t_len: int,
+                      n_nodes: int, window: int, reps: int = 5,
+                      refresh_every: int = 5) -> Dict:
+    """One quantized-serving comparison cell (PR-5 paired discipline: same
+    streams, identical protocol, policies timed ROUND-ROBIN with
+    best-of-reps per policy so shared-host noise windows cannot land on a
+    single column).
+
+    Besides samples/sec the row records the two host-independent axes:
+    the per-slot serving-readout footprint (int8 codes + 3 f32 scale
+    scalars vs fp32 weights - the deterministic memory-reduction
+    acceptance) and the optimized-HLO per-step FLOPs/bytes of both
+    serving programs.  Predictions are captured per policy so the int8
+    column carries its own argmax-agreement-vs-fp32 number; training is
+    fp32 either way (tests/test_stream_quant.py proves the states bitwise
+    equal), so agreement measures exactly the serving-path rounding.
+    """
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=n_nodes)
+    phase_steps = 4
+    assert n_samples % window == 0
+    total_samples = n_streams * n_samples
+
+    def run_once(kw):
+        streams = _make_streams(n_streams, n_samples, t_len, 3, 4)
+        elapsed, _ = _serve_batched(
+            cfg, streams, t_len, window, phase_steps, refresh_every,
+            refresh_mode="incremental", **kw,
+        )
+        return elapsed, streams
+
+    for _, kw in QUANT_POLICIES:        # warm every jitted program first
+        run_once(kw)
+    best: Dict[str, float] = {}
+    preds: Dict[str, List[np.ndarray]] = {}
+    for _ in range(reps):
+        for name, kw in QUANT_POLICIES:
+            t, streams = run_once(kw)
+            if name not in best or t < best[name]:
+                best[name] = t
+            # episodes are deterministic per policy - any rep's preds do
+            preds[name] = [np.asarray(r.preds).copy() for r in streams]
+
+    row: Dict = {
+        "table": "stream-quant",
+        "cell": f"S{n_streams}/Nx{n_nodes}/W{window}",
+        "samples": n_samples,
+    }
+    base_time = best["fp32"]
+    for name, _ in QUANT_POLICIES:
+        row[f"{name}_samples_per_s"] = round(total_samples / best[name], 1)
+        if name != "fp32":
+            row[f"{name}_speedup"] = round(base_time / best[name], 2)
+    row["int8_fp32_agreement"] = round(float(np.mean(
+        [(a == b).mean() for a, b in zip(preds["int8"], preds["fp32"])])), 4)
+
+    # serving-state footprint per slot: what the serving step reads beyond
+    # the (shared-shape) reservoir inputs - int8 readout codes + the three
+    # f32 quant scalars (w_scale, x_scale, x_absmax) vs the fp32 readout
+    nr = n_nodes * (n_nodes + 1)
+    fp32_bytes = 4 * cfg.n_classes * nr
+    int8_bytes = 1 * cfg.n_classes * nr + 3 * 4
+    row["fp32_readout_bytes_per_slot"] = fp32_bytes
+    row["int8_readout_bytes_per_slot"] = int8_bytes
+    row["readout_bytes_ratio"] = round(fp32_bytes / int8_bytes, 2)
+
+    for qname, quantize in (("fp32", "none"), ("int8", "int8")):
+        cost = _infer_step_cost(n_nodes, 4, n_streams, window, t_len,
+                                quantize=quantize)
+        row[f"{qname}_infer_flops_per_step"] = cost["flops"]
+        row[f"{qname}_infer_mem_bytes_per_step"] = cost["mem_bytes"]
+    return row
+
+
+def _bench_quant_drift_case(n_streams: int, n_samples: int, t_len: int,
+                            n_nodes: int, window: int, reps: int = 2,
+                            forget: float = 0.95,
+                            n_classes: int = 4) -> Dict:
+    """int8 vs fp32 accuracy band on the NARMA10 piecewise-drift fixture.
+
+    Both paths serve the identical episode (forget retirement, the drift
+    table's protocol); training statistics stay fp32 under int8 serving,
+    so any accuracy delta is pure serving-path rounding.  The pre/at/post
+    segments and the ``*_acc_delta`` columns are the tracked tolerance
+    band the acceptance gate reads.
+    """
+    cfg = DFRConfig(n_in=1, n_classes=n_classes, n_nodes=n_nodes)
+    assert n_samples % window == 0
+    row: Dict = {
+        "table": "quant-drift",
+        "cell": f"S{n_streams}/N{n_samples}/Nx{n_nodes}/W{window}",
+        "forget_lambda": forget,
+    }
+    for name, kw in (("fp32", {}), ("int8", {"quantize": "int8"})):
+        def run_once():
+            streams, switches = _make_drift_streams(
+                n_streams, n_samples, t_len, n_classes
+            )
+            elapsed, _ = _serve_batched(
+                cfg, streams, t_len, window, phase_steps=3, refresh_every=2,
+                refresh_mode="incremental", retirement="forget",
+                forget=forget, **kw,
+            )
+            return elapsed, streams, switches
+
+        run_once()      # warm
+        best_t, streams, switches = None, None, None
+        for _ in range(reps):
+            t, st, sw = run_once()
+            if best_t is None or t < best_t:
+                best_t, streams, switches = t, st, sw
+        pre, at, post = drift_segment_bounds(n_samples, switches[0], window)
+        for seg_name, (lo, hi) in (("pre", pre), ("at", at), ("post", post)):
+            row[f"{name}_{seg_name}_acc"] = round(float(np.mean(
+                [_segment_accuracy(r, lo, hi) for r in streams])), 3)
+        row[f"{name}_samples_per_s"] = round(
+            n_streams * n_samples / best_t, 1)
+    for seg in ("pre", "at", "post"):
+        row[f"{seg}_acc_delta"] = round(
+            row[f"int8_{seg}_acc"] - row[f"fp32_{seg}_acc"], 3)
+    return row
+
+
+def run_quant(full: bool = False, smoke: bool = False) -> List[Dict]:
+    """The quantized fast-path table (tracked in BENCH_stream_quant.json).
+
+    The Nx=16/S=16/W=1 cell is the ISSUE-7 acceptance regime (the PR-5
+    pipeline protocol's headline cell); Nx=8 is the honest dispatch-bound
+    column where the int8 kernel saves little compute.
+    """
+    if smoke:
+        quant_cases = [(4, 8, 16, 8, 1)]
+        drift_cases = [(2, 64, 16, 8, 4)]
+    elif full:
+        quant_cases = [(16, 20, 24, 16, 1), (16, 20, 24, 8, 1),
+                       (32, 20, 24, 16, 1)]
+        drift_cases = [(4, 160, 16, 8, 4), (4, 160, 16, 16, 4)]
+    else:
+        quant_cases = [(16, 20, 24, 16, 1), (16, 20, 24, 8, 1)]
+        drift_cases = [(4, 160, 16, 16, 4)]
+    rows = [_bench_quant_case(*c) for c in quant_cases]
+    rows += [_bench_quant_drift_case(*c) for c in drift_cases]
+    return rows
 
 
 def run(full: bool = False, smoke: bool = False) -> List[Dict]:
@@ -608,11 +842,17 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="the device-count scaling table only (forces 8 "
                          "virtual devices in a subprocess when needed)")
+    ap.add_argument("--quant", action="store_true",
+                    help="the int8 fast-path + step-blocking table only")
     ap.add_argument("--json", action="store_true",
                     help="emit rows as JSON lines (machine readable)")
     args = ap.parse_args()
-    rows = (run_sharded(full=args.full, smoke=args.smoke) if args.sharded
-            else run(full=args.full, smoke=args.smoke))
+    if args.sharded:
+        rows = run_sharded(full=args.full, smoke=args.smoke)
+    elif args.quant:
+        rows = run_quant(full=args.full, smoke=args.smoke)
+    else:
+        rows = run(full=args.full, smoke=args.smoke)
     for row in rows:
         print(json.dumps(row) if args.json else row)
 

@@ -27,7 +27,7 @@ def main() -> None:
                     help="all 12 datasets at full Table-4 sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma list: ridge,backprop,truncation,system,"
-                         "population,stream,roofline")
+                         "population,stream,stream_quant,roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_backprop, bench_population, bench_ridge,
@@ -42,6 +42,7 @@ def main() -> None:
         "population": lambda: bench_population.run(args.full),
         "stream": lambda: bench_stream.run(args.full),
         "stream_sharded": lambda: bench_stream.run_sharded(args.full),
+        "stream_quant": lambda: bench_stream.run_quant(args.full),
         "roofline": lambda: roofline.summary_csv(),
     }
     # opt-in only: the sharded sweep re-execs under 8 forced XLA devices,
@@ -54,8 +55,8 @@ def main() -> None:
         print(f"# --- {name} ---", flush=True)
         try:
             rows = suites[name]()
-            if name == "stream_sharded":
-                _write_bench_json(rows)
+            if name in _BENCH_JSON:
+                _write_bench_json(name, rows)
             _emit([dict(r) for r in rows])
         except Exception as ex:  # noqa: BLE001
             print(f"{name},0,error={type(ex).__name__}:{ex}", file=sys.stderr)
@@ -63,27 +64,55 @@ def main() -> None:
     print(f"# done in {time.time()-t0:.1f}s")
 
 
-def _write_bench_json(rows) -> None:
-    """The tracked scaling record: BENCH_stream_sharded.json at the repo
-    root (the ROADMAP notes the perf trajectory was off the record until
-    this file; regenerate with ``--only stream_sharded``)."""
+# tracked perf records at the repo root, one per suite that owns a
+# BENCH_*.json contract: (filename, unit, honest caveat).  Every row of
+# these files also carries per-step FLOPs/bytes from launch/hlo_cost
+# (groundwork for the ROADMAP cost-model planner item).
+_BENCH_JSON = {
+    "stream_sharded": (
+        "BENCH_stream_sharded.json",
+        "served samples/sec vs slot-mesh device count",
+        "columns with more mesh devices than physical host cores are "
+        "flagged dN_oversubscribed and report dN_overhead_ratio instead "
+        "of dN_speedup: forced host-device splits time-slice the shared "
+        "cores, so those numbers measure sharding OVERHEAD, never "
+        "speedup; regenerate on a host with real parallel devices for a "
+        "scaling curve",
+    ),
+    "stream_quant": (
+        "BENCH_stream_quant.json",
+        "int8 quantized serving fast path + step blocking vs fp32",
+        "samples/sec columns are wall-clock on this host (PR-5 paired "
+        "round-robin protocol); readout_bytes_ratio and the "
+        "*_infer_flops/_mem_bytes_per_step columns are host-independent "
+        "but count dot/conv work only - the int8 program casts the ring "
+        "recurrence as int8 dots while fp32 keeps it elementwise "
+        "(invisible to the model), so they track per-program trends, not "
+        "a cross-path ratio; quant-drift rows track the int8 accuracy "
+        "band (training stays fp32, so deltas are pure serving-path "
+        "rounding)",
+    ),
+}
+
+
+def _write_bench_json(name, rows) -> None:
+    """The tracked perf records (see ``_BENCH_JSON``; the ROADMAP notes
+    the perf trajectory was off the record until these files; regenerate
+    with ``--only <suite>``)."""
     import json
     import os
     import platform
 
+    fname, unit, note = _BENCH_JSON[name]
     path = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_stream_sharded.json")
+        os.path.abspath(__file__))), fname)
     doc = {
-        "bench": "stream_sharded",
-        "unit": "served samples/sec vs slot-mesh device count",
-        "command": "PYTHONPATH=src python -m benchmarks.run"
-                   " --only stream_sharded",
+        "bench": name,
+        "unit": unit,
+        "command": f"PYTHONPATH=src python -m benchmarks.run --only {name}",
         "host": {"cores": os.cpu_count(), "machine": platform.machine(),
                  "python": platform.python_version()},
-        "note": "forced host-device splits share the physical cores: with "
-                "host.cores <= host_devices the dN columns measure sharding "
-                "OVERHEAD (speedup < 1 expected); regenerate on a host with "
-                "real parallel devices for a scaling curve",
+        "note": note,
         "rows": list(rows),
     }
     with open(path, "w") as fh:

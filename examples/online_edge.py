@@ -36,6 +36,18 @@ devices (PR 6; ``--max-streams`` is rounded up to a multiple of N).  On a
 CPU-only host the flag also forces the XLA host-device split, so
 ``--devices 8`` works out of the box - the episode is bitwise the
 single-device one; only the placement changes.
+
+Quantized serving (``--quantize int8``, PR 7): armed slots answer from the
+int8 fused fast path (coded readout + reservoir state, integer compute,
+fp32 dequantized logits); scales calibrate online and fold at the ridge
+refresh boundaries, training stays fp32.  Step blocking
+(``--step-block T``) fuses up to T window rounds per slot into one
+dispatch; the served episode is exactly the ``--step-block 1`` one.  Both
+compose with ``--devices``:
+
+    PYTHONPATH=src python examples/online_edge.py --quantize int8
+    PYTHONPATH=src python examples/online_edge.py --step-block 4 \
+        --quantize int8 --devices 8
 """
 import argparse
 import os
@@ -95,6 +107,8 @@ def _server_pipeline_kw(args) -> dict:
         "pipeline_depth": args.pipeline_depth,
         "staging": "host" if args.host_staging else "device",
         "devices": args.devices,
+        "quantize": args.quantize,
+        "step_block": args.step_block,
     }
 
 
@@ -113,6 +127,10 @@ def _print_mesh(server) -> None:
         print(f"  slot mesh: {server.devices} devices x "
               f"{server.max_streams // server.devices} slots each "
               f"({jax.device_count()} XLA devices visible)")
+    if server.quantize != "none" or server.step_block > 1:
+        print(f"  serving fast path: quantize={server.quantize}, "
+              f"step_block={server.step_block} (training stays fp32; the "
+              f"episode schedule matches the unblocked fp32 server)")
 
 
 def run_drift(args) -> None:
@@ -201,6 +219,18 @@ def main():
                          "N; forces the XLA host-device split on CPU so "
                          "N > physical devices works; the episode is "
                          "bitwise the single-device one)")
+    ap.add_argument("--quantize", choices=("none", "int8"), default="none",
+                    help="serve armed slots from the int8 fused fast path "
+                         "(PR 7): coded readout + reservoir state, integer "
+                         "reservoir/DPRR/readout compute, fp32 dequantized "
+                         "logits; scales fold at ridge-refresh boundaries "
+                         "and training stays fp32 (requires device staging)")
+    ap.add_argument("--step-block", type=int, default=1, metavar="T",
+                    help="multi-sample step blocking: fuse up to T window "
+                         "rounds per slot into ONE dispatch (PR 7); blocks "
+                         "clamp at retirement boundaries so the served "
+                         "episode is exactly the T=1 one (requires device "
+                         "staging)")
     ap.add_argument("--host-staging", action="store_true",
                     help="use the PR-4 host-staged batch build instead of "
                          "the device-resident request pool (A/B baseline; "

@@ -42,7 +42,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backprop, candidates, dprr, masking, reservoir, ridge
-from repro.core.types import Array, DFRConfig, DFRParams, RidgeState
+from repro.core.types import (Array, DFRConfig, DFRParams, QuantParams,
+                              RidgeState)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -53,15 +54,22 @@ class OnlineState:
     Leaves may carry a leading member/slot axis: every pure function below
     is written for the single-system shapes and vmapped by the ensemble and
     stream-server wrappers.
+
+    ``quant`` is the int8 serving fast-path state (``QuantParams``): inert
+    zeros unless the serving stack runs with ``quantize='int8'``.  It rides
+    the state tree so admission resets, retirement snapshots, donation and
+    slot sharding all cover it for free; the fp32 math never reads it.
     """
 
     params: DFRParams
     ridge: RidgeState
     step: Array          # int32 counter
     loss_ema: Array      # scalar diagnostics
+    quant: QuantParams   # int8 serving codes + scales (inert when fp32)
 
     def tree_flatten(self):
-        return (self.params, self.ridge, self.step, self.loss_ema), None
+        return (self.params, self.ridge, self.step, self.loss_ema,
+                self.quant), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -96,6 +104,7 @@ def init_state(cfg: DFRConfig, factor_beta: Optional[float] = None) -> OnlineSta
         ridge=rs,
         step=jnp.zeros((), jnp.int32),
         loss_ema=jnp.zeros((), cfg.dtype),
+        quant=QuantParams.zeros(cfg.n_classes, cfg.n_rep),
     )
 
 
@@ -153,6 +162,7 @@ def reset_statistics(
         return OnlineState(
             params=state.params, ridge=rs,
             step=state.step, loss_ema=state.loss_ema,
+            quant=state.quant,
         )
     rs = jax.tree_util.tree_map(jnp.zeros_like, state.ridge)
     if factor_beta is not None:
@@ -166,6 +176,7 @@ def reset_statistics(
         ridge=rs,
         step=state.step,
         loss_ema=state.loss_ema,
+        quant=state.quant,
     )
 
 
@@ -268,6 +279,7 @@ def online_step(
         ),
         step=state.step + 1,
         loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
+        quant=state.quant,
     )
     logits = r @ params.W.T + params.b
     hits = (jnp.argmax(logits, -1) == label).astype(jnp.float32)
@@ -293,6 +305,7 @@ def online_serve_step(
     maintain_factor: "bool | str" = False,  # False | True | 'defer'
     forget: Optional[Array] = None,  # lambda in (0, 1]: decay per sample
     train: bool = True,
+    track_state_absmax: bool = False,
 ) -> Tuple[OnlineState, Array, Dict[str, Array]]:
     """Fused infer-before-update + train step for the serving path.
 
@@ -364,7 +377,14 @@ def online_serve_step(
     learning rate subtracts exactly 0 from every (finite-gradient, already
     range-clamped) parameter, so the stream server cond-gates the whole
     backward out of its steady state (every live slot frozen) without
-    changing the served episode.
+    changing the episode served.
+
+    ``track_state_absmax`` (static) compiles in the int8 calibration
+    statistic: ``quant.x_absmax`` picks up the max |x| over the window's
+    live boundary states (``aux.x_last``/``aux.x_prev`` - the states the
+    shared forward already materializes).  Off (the default) no quant leaf
+    moves and no extra math is compiled, keeping the fp32 serving program
+    identical to the pre-quantization build.
 
     Returns (new state, logits (B, Ny), metrics).
     """
@@ -441,6 +461,19 @@ def online_serve_step(
         # the prior decays with the data (exponentially-weighted RLS), so
         # the factor keeps factoring  B + factor_beta I  exactly
         factor_beta = factor_beta * decay
+    if track_state_absmax:
+        # int8 calibration: running max |x| over the live boundary states
+        # the forward already produced (weight-gated so dead/tail rows are
+        # exact no-ops; scales fold from this at refresh boundaries)
+        amax = jnp.maximum(
+            jnp.max(jnp.abs(aux.x_last) * w[:, None]),
+            jnp.max(jnp.abs(aux.x_prev) * w[:, None]),
+        ).astype(state.quant.x_absmax.dtype)
+        quant = dataclasses.replace(
+            state.quant, x_absmax=jnp.maximum(state.quant.x_absmax, amax)
+        )
+    else:
+        quant = state.quant
     new = OnlineState(
         params=params,
         ridge=RidgeState(
@@ -453,6 +486,7 @@ def online_serve_step(
         ),
         step=state.step + 1,
         loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
+        quant=quant,
     )
     hits = (jnp.argmax(aux.logits, -1) == label).astype(jnp.float32) * w
     metrics = {"loss": loss * inv, "acc": jnp.sum(hits) * inv}
@@ -559,6 +593,42 @@ def refresh_output_factor_rows(
     return scatter_readout_rows(state, Wt, eligible_rows, rows)
 
 
+def fold_quant_rows(
+    state: OnlineState, rows: Array, eligible_rows: Array
+) -> OnlineState:
+    """Fold fresh int8 serving scales for slot rows ``rows`` of a slot-axis
+    state where ``eligible_rows`` holds (same scatter contract as
+    ``scatter_readout_rows``).
+
+    Runs at ridge-refresh boundaries - the only place W moves in the
+    serving steady state, so requantizing there keeps ``Wq * w_scale ~= W``
+    without any per-step requantization cost.  ``w_scale`` comes from the
+    freshly refreshed readout row, ``x_scale`` from the running
+    ``x_absmax`` calibration tracked by ``online_serve_step``.  The scales
+    are strictly positive after the first fold, which is what arms the
+    server's quantized logits path for that slot.
+    """
+    from repro.kernels import ops as kops  # local: kernels import core
+
+    q = state.quant
+    el = eligible_rows
+    W_rows = state.params.W[rows].astype(jnp.float32)       # (R, Ny, Nr)
+    w_scale = kops.symmetric_scale(
+        jnp.max(jnp.abs(W_rows), axis=(-2, -1)))            # (R,)
+    Wq = kops.quantize_symmetric(W_rows, w_scale[:, None, None])
+    x_scale = kops.symmetric_scale(q.x_absmax[rows])        # (R,)
+    quant = QuantParams(
+        Wq=q.Wq.at[rows].set(
+            jnp.where(el[:, None, None], Wq, q.Wq[rows])),
+        w_scale=q.w_scale.at[rows].set(
+            jnp.where(el, w_scale, q.w_scale[rows])),
+        x_scale=q.x_scale.at[rows].set(
+            jnp.where(el, x_scale, q.x_scale[rows])),
+        x_absmax=q.x_absmax,
+    )
+    return dataclasses.replace(state, quant=quant)
+
+
 def _state_logical_axes(*leading: str) -> OnlineState:
     """``OnlineState``-shaped pytree of logical-axes tuples: every leaf
     leads with ``leading`` (one name per stacked leading dim), trailing
@@ -576,6 +646,10 @@ def _state_logical_axes(*leading: str) -> OnlineState:
         ),
         step=lead,
         loss_ema=lead,
+        quant=QuantParams(
+            Wq=lead + (None, None),
+            w_scale=lead, x_scale=lead, x_absmax=lead,
+        ),
     )
 
 

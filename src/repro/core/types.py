@@ -117,6 +117,54 @@ class DFRParams:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class QuantParams:
+    """Per-model int8 serving state for the quantized inference fast path.
+
+    Symmetric (zero-point-free) int8 quantization of the two serving-path
+    operands: the readout weights and the reservoir state.  Training and
+    the ridge statistics stay fp32 - this state only feeds the
+    ``quantize='int8'`` serving kernel (``kernels.ops.streaming_logits_q8``).
+
+    Scales are *folded* at ridge-refresh boundaries (where W changes
+    anyway, see ``online.fold_quant_rows``): ``w_scale``/``Wq`` from the
+    freshly refreshed readout, ``x_scale`` from the running reservoir
+    amplitude calibration ``x_absmax`` tracked during fp32 serving.
+    ``w_scale == 0`` means "not yet armed" - the server keeps serving fp32
+    logits for that slot until the first refresh folds live scales.
+
+    Wq:       (Ny, Nr) int8  quantized readout codes (W ~= Wq * w_scale).
+    w_scale:  scalar f32     readout scale, 0 until first fold.
+    x_scale:  scalar f32     reservoir-state scale, 0 until first fold.
+    x_absmax: scalar f32     running max |x| seen while serving (calibration).
+    """
+
+    Wq: Array
+    w_scale: Array
+    x_scale: Array
+    x_absmax: Array
+
+    def tree_flatten(self):
+        return (self.Wq, self.w_scale, self.x_scale, self.x_absmax), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, n_classes: int, n_rep: int) -> "QuantParams":
+        """Codes and scales; scales stay fp32 even under a bf16 config -
+        the quantization *bookkeeping* is part of the fp32 statistics."""
+        return cls(
+            Wq=jnp.zeros((n_classes, n_rep), jnp.int8),
+            w_scale=jnp.zeros((), jnp.float32),
+            x_scale=jnp.zeros((), jnp.float32),
+            x_absmax=jnp.zeros((), jnp.float32),
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class RidgeState:
     """Streaming sufficient statistics for Ridge regression (paper Eq. 21-22).
 

@@ -23,7 +23,13 @@ independently, so a sharded ensemble-of-slots state (leaves leading with
 ``("slot", "member", ...)``) shards both ways at once; on the production
 mesh the uniqueness guard lets the leading ``slot`` claim the data axes
 and replicates ``member`` (slots are the coarser unit of serving
-parallelism).
+parallelism).  The slot rule needs no per-dtype special case: the PR-7
+int8 quantization leaves (``QuantParams``: per-slot ``Wq`` int8 codes,
+``w_scale``/``x_scale``/``x_absmax`` f32 scalars-per-slot) all lead with
+the slot axis like every other ``SlotStates`` leaf, so the same
+``P("slot", ...)`` placement covers them and the sharded quantized
+episode stays bitwise the single-device one (CI: the forced-8-device
+sharded x quantized parity tests).
 
 A ``MeshContext`` (set by the launcher) makes ``shard_act`` constraints
 active; without one everything is a no-op so unit tests run untouched.

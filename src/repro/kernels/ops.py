@@ -24,13 +24,43 @@ from repro.kernels.dprr import dprr_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.reservoir import reservoir_pallas
 from repro.kernels.ridge_solve import ridge_solve_blocked, cholesky_blocked
-from repro.kernels.streaming import streaming_step_pallas
+from repro.kernels.streaming import (streaming_step_pallas,
+                                     streaming_step_pallas_q8)
 
 
 def _auto_backend(backend: Optional[str]) -> str:
     if backend is not None:
         return backend
     return "tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# Symmetric int8 quantization primitives (the serving fast path's contract;
+# same convention as optim.compression's gradient codec: scale = absmax/127
+# with an epsilon floor, codes clipped to +-127, zero-point-free)
+# ---------------------------------------------------------------------------
+
+
+def symmetric_scale(absmax: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Symmetric int8 scale from an absolute maximum: ``max(|v|)/127``.
+
+    The epsilon floor keeps an all-zero operand (e.g. a zero-range
+    reservoir window) quantizing to all-zero codes instead of NaNs -
+    dequantization then reproduces the zeros exactly."""
+    return jnp.maximum(absmax.astype(jnp.float32), eps) / 127.0
+
+
+def quantize_symmetric(v: jax.Array, scale: jax.Array) -> jax.Array:
+    """fp -> int8 codes: ``clip(round(v / scale), -127, 127)``."""
+    return jnp.clip(
+        jnp.round(v.astype(jnp.float32) / scale), -127, 127
+    ).astype(jnp.int8)
+
+
+def dequantize_symmetric(q: jax.Array, scale: jax.Array,
+                         dtype=jnp.float32) -> jax.Array:
+    """int8 codes -> fp: ``q * scale``."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -226,6 +256,103 @@ def streaming_logits_slots(
             f=f, chunk_t=chunk_t, backend=backend,
         )
     )(j_seq, lengths, p, q, W, b)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "f", "chunk_t", "backend")
+)
+def streaming_logits_q8(
+    j_seq: jax.Array,      # (B, T, Nx) masked inputs (any float dtype)
+    lengths: jax.Array,    # (B,) int32
+    p: jax.Array,          # scalar reservoir gain
+    q: jax.Array,          # scalar ring gain (quantized into ring codes here)
+    Wq: jax.Array,         # (Ny, Nr) int8 readout codes
+    w_scale: jax.Array,    # scalar f32 readout scale (0 = unarmed)
+    x_scale: jax.Array,    # scalar f32 reservoir-state scale (0 = unarmed)
+    b: jax.Array,          # (Ny,) fp readout bias (stays fp)
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    chunk_t: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Quantized fused serving logits (B, Ny): the int8 fast path.
+
+    Owns the whole code/scale prep so callers deal only in ``QuantParams``
+    leaves: the ring matrix is built fp32 (ring-padded exactly like the
+    fp32 kernel) and coded per call with its own scale - it depends only on
+    the frozen ``q``, so XLA hoists the coding out of the serving loop -
+    while the readout codes arrive pre-folded from the refresh boundary.
+
+    Unarmed scales (0, i.e. no refresh has folded codes yet) are replaced
+    by 1.0 so the program stays NaN-free; the serving caller must discard
+    those slots' logits (``StreamServer`` selects fp32 logits until the
+    slot arms).  Inputs are cast to fp32: the quantized path defines its
+    own precision end to end, so bf16 configs feed it unchanged.
+    """
+    backend = _auto_backend(backend)
+    bsz, t, nx = j_seq.shape
+    assert nx == n_nodes
+    if chunk_t is None:
+        chunk_t = min(128, -(-t // 8) * 8)
+    ny = Wq.shape[0]
+    n_pad = max(128, -(-nx // 128) * 128)
+    ny_pad = max(8, -(-ny // 8) * 8)
+    jp = _pad_to(_pad_to(j_seq.astype(jnp.float32), 2, n_pad), 1, chunk_t)
+    Lp, qp = _ring_padded(q, nx, n_pad)
+    sL = symmetric_scale(jnp.max(jnp.abs(Lp)))
+    Lq8 = quantize_symmetric(Lp, sL)
+    sx = jnp.where(x_scale > 0, x_scale, 1.0).astype(jnp.float32)
+    sw = jnp.where(w_scale > 0, w_scale, 1.0).astype(jnp.float32)
+    # readout codes in the accumulator's (i, j) layout (the int8 twin of
+    # the fp32 w3 tile): dot-product block at [:nx, :nx], sums at j = nx
+    Wblk = Wq[:, : nx * nx].reshape(ny, nx, nx)
+    Wsum = Wq[:, nx * nx:]
+    w3q = jnp.zeros((ny_pad, n_pad, n_pad), jnp.int8)
+    w3q = w3q.at[:ny, :nx, :nx].set(Wblk)
+    w3q = w3q.at[:ny, :nx, nx].set(Wsum)
+    scales = jnp.stack([p.astype(jnp.float32), sx, sL, sw])
+    if backend == "xla":
+        out = kref.streaming_q8_sim(
+            jp, Lq8, qp, lengths.astype(jnp.int32), w3q, scales, nx, f=f
+        )
+    else:
+        out = streaming_step_pallas_q8(
+            jp, Lq8, qp, lengths.astype(jnp.int32), w3q, scales, nx,
+            f=f, chunk_t=chunk_t, interpret=(backend == "interpret"),
+        )
+    return out[:, :ny] + b.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "f", "chunk_t", "backend")
+)
+def streaming_logits_slots_q8(
+    j_seq: jax.Array,      # (S, B, T, Nx) masked inputs, slot axis leading
+    lengths: jax.Array,    # (S, B) int32
+    p: jax.Array,          # (S,) per-slot reservoir gains
+    q: jax.Array,          # (S,)
+    Wq: jax.Array,         # (S, Ny, Nr) int8 per-slot readout codes
+    w_scale: jax.Array,    # (S,) f32
+    x_scale: jax.Array,    # (S,) f32
+    b: jax.Array,          # (S, Ny)
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    chunk_t: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Slot-axis batched ``streaming_logits_q8``: (S, B, Ny) f32 in one
+    dispatch - the int8 twin of ``streaming_logits_slots``, same
+    slot-local contract under the sharded server (S is device-local inside
+    ``shard_map``, no collectives)."""
+    return jax.vmap(
+        lambda j_s, len_s, p_s, q_s, Wq_s, ws_s, xs_s, b_s:
+        streaming_logits_q8(
+            j_s, len_s, p_s, q_s, Wq_s, ws_s, xs_s, b_s, n_nodes,
+            f=f, chunk_t=chunk_t, backend=backend,
+        )
+    )(j_seq, lengths, p, q, Wq, w_scale, x_scale, b)
 
 
 # ---------------------------------------------------------------------------

@@ -92,6 +92,87 @@ def streaming_logits_ref(
     return r @ W.T + b
 
 
+def streaming_q8_sim(
+    j_seq: jax.Array,      # (B, T_pad, n_pad) f32 masked inputs, zero padded
+    Lq: jax.Array,         # (n_pad, n_pad) int8 ring-matrix codes (scale sL)
+    qpow: jax.Array,       # (n_pad,) f32 ring powers (fp32 path, not coded)
+    lengths: jax.Array,    # (B,) int32
+    w3q: jax.Array,        # (ny_pad, n_pad, n_pad) int8 readout codes
+    scales: jax.Array,     # (4,) f32: [p, sx, sL, sw] (all > 0)
+    n_nodes: int,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+) -> jax.Array:
+    """Oracle of kernels.streaming.streaming_step_pallas_q8: the quantized
+    fused step's *exact* integer math on padded shapes.
+
+    The int8 contract (shared bit-for-bit with the kernel - integer
+    arithmetic is exact, so op order doesn't matter):
+
+      * the recurrent state lives as int8 codes ``xq`` with scale ``sx``
+        (dequantize, apply the fp32 nonlinearity, requantize - the
+        nonlinearity and the ring wrap stay fp32, everything else is
+        integer),
+      * the reservoir mix is an int8 x int8 -> int32 dot against the coded
+        ring matrix (scale ``sL``), dequantized by ``sx * sL``,
+      * dead steps freeze in the *code* domain (bitwise no-op, matching the
+        fp32 kernel's freeze),
+      * the DPRR accumulator is int32 over code outer products; the ones
+        column carries the integer constant 1 (exact), so its dequant
+        scale is ``sx`` where the x-columns carry ``sx^2``,
+      * the readout dequantizes the accumulator per column and contracts
+        in fp32 against the dequantized int8 readout tile (scale ``sw``) -
+        the "fp32 dequantized logits" half of the contract.
+
+    Overflow headroom: reservoir dot <= 127^2 * n_pad, DPRR accumulator
+    <= 127^2 * T per cell - both orders of magnitude inside int32.
+    Returns raw logits (B, ny_pad), bias not yet added.
+    """
+    _, t_pad, n_pad = j_seq.shape
+    ny_pad = w3q.shape[0]
+    p, sx, sL, sw = scales[0], scales[1], scales[2], scales[3]
+    col = jnp.arange(n_pad)
+    LqT = Lq.astype(jnp.int8).T
+
+    def one(jb, length):
+        def step(carry, inp):
+            xq_prev, acc = carry
+            j_k, k = inp
+            x_prev = xq_prev.astype(jnp.float32) * sx
+            a = p * f(j_k + x_prev)
+            aq = jnp.clip(jnp.round(a / sx), -127, 127).astype(jnp.int8)
+            y = jax.lax.dot_general(
+                aq[None, :], LqT,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )[0]
+            x_k = y.astype(jnp.float32) * (sx * sL) + x_prev[-1] * qpow
+            xq_k = jnp.clip(jnp.round(x_k / sx), -127, 127).astype(jnp.int32)
+            live = k < length
+            xq_k = jnp.where(live, xq_k, xq_prev)
+            x1m = jnp.where((col < n_nodes) & live, xq_k, 0)
+            x0_aug = jnp.where(col < n_nodes, xq_prev,
+                               jnp.where(col == n_nodes, 1, 0))
+            acc = acc + jax.lax.dot_general(
+                x1m.astype(jnp.int8)[:, None], x0_aug.astype(jnp.int8)[:, None],
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            return (xq_k, acc), None
+
+        carry0 = (jnp.zeros((n_pad,), jnp.int32),
+                  jnp.zeros((n_pad, n_pad), jnp.int32))
+        (_, acc), _ = jax.lax.scan(
+            step, carry0, (jb, jnp.arange(t_pad, dtype=jnp.int32))
+        )
+        # per-column dequant: x columns carry sx^2, the ones column sx
+        colscale = jnp.where(col == n_nodes, sx, sx * sx)
+        racc = acc.astype(jnp.float32) * colscale[None, :]
+        w = w3q.reshape(ny_pad, n_pad * n_pad).astype(jnp.float32) * sw
+        return racc.reshape(n_pad * n_pad) @ w.T
+
+    return jax.vmap(one)(j_seq, lengths.astype(jnp.int32))
+
+
 def reservoir_ref(
     j_seq: jax.Array,      # (B, T_pad, n_pad)
     x0: jax.Array,         # (B, n_pad)

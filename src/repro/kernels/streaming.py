@@ -103,6 +103,89 @@ def _streaming_kernel(
         )
 
 
+def _streaming_kernel_q8(
+    len_ref,     # scalar prefetch: (B,) int32 valid lengths
+    j_ref,       # (chunk_t, 1, n_pad) masked inputs (fp32)
+    Lq_ref,      # (n_pad, n_pad) int8 ring-matrix codes (scale sL)
+    qpow_ref,    # (1, n_pad) f32 ring powers (the ring wrap stays fp32)
+    scal_ref,    # (1, 4) f32: [p, sx, sL, sw]
+    w3q_ref,     # (ny_pad, n_pad, n_pad) int8 readout codes (scale sw)
+    out_ref,     # (1, ny_pad) f32 logits (written at the last time chunk)
+    state,       # VMEM scratch (1, n_pad) int32 state *codes*
+    acc,         # VMEM scratch (n_pad, n_pad) int32 DPRR code accumulator
+    *,
+    f: Callable[[jax.Array], jax.Array],
+    chunk_t: int,
+    n_nodes: int,
+):
+    """Int8 variant of ``_streaming_kernel``: the reservoir mix and the DPRR
+    accumulation run int8 x int8 -> int32 on symmetric codes; only the
+    nonlinearity, the ring wrap and the final readout dequant are fp32.
+    Exact-math contract shared with ``ref.streaming_q8_sim`` (the oracle) -
+    integer arithmetic carries no rounding, so the two agree bitwise on the
+    codes and to fp rounding on the dequantized logits."""
+    b = pl.program_id(0)
+    tc = pl.program_id(1)
+    n_pad = acc.shape[0]
+
+    @pl.when(tc == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+        acc[...] = jnp.zeros_like(acc)
+
+    p = scal_ref[0, 0]
+    sx = scal_ref[0, 1]
+    sL = scal_ref[0, 2]
+    LqT = Lq_ref[...].T
+    qpow = qpow_ref[...]
+    length = len_ref[b]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
+
+    def step(t, _):
+        xq_prev = state[...]                      # (1, n_pad) int32 codes
+        x_prev = xq_prev.astype(jnp.float32) * sx
+        j_k = j_ref[t, :, :]
+        a = p * f(j_k + x_prev)
+        aq = jnp.clip(jnp.round(a / sx), -127, 127).astype(jnp.int8)
+        y = jax.lax.dot(
+            aq, LqT, preferred_element_type=jnp.int32
+        )
+        x_k = y.astype(jnp.float32) * (sx * sL) + x_prev[:, -1:] * qpow
+        xq_k = jnp.clip(jnp.round(x_k / sx), -127, 127).astype(jnp.int32)
+        k_global = tc * chunk_t + t
+        live = k_global < length
+        xq_k = jnp.where(live, xq_k, xq_prev)     # freeze in the code domain
+        x1m = jnp.where((col < n_nodes) & live, xq_k, 0)
+        x0_aug = jnp.where(
+            col < n_nodes, xq_prev, jnp.where(col == n_nodes, 1, 0)
+        )
+        acc[...] += jax.lax.dot_general(
+            x1m.astype(jnp.int8), x0_aug.astype(jnp.int8),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        state[...] = xq_k
+        return 0
+
+    jax.lax.fori_loop(0, chunk_t, step, 0)
+
+    @pl.when(tc == pl.num_programs(1) - 1)
+    def _readout():
+        sw = scal_ref[0, 3]
+        # dequantize per accumulator column (x columns sx^2, ones column sx)
+        colscale = jnp.where(
+            col == n_nodes, sx, sx * sx).astype(jnp.float32)
+        racc = acc[...].astype(jnp.float32) * colscale
+        flat = racc.reshape(1, n_pad * n_pad)
+        w = w3q_ref[...].reshape(
+            w3q_ref.shape[0], n_pad * n_pad).astype(jnp.float32) * sw
+        out_ref[...] = jax.lax.dot_general(
+            flat, w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
 def streaming_step_pallas(
     j_seq: jax.Array,     # (B, T_pad, n_pad) f32; node padding must be zero
     L: jax.Array,         # (n_pad, n_pad) ring matrix, zero padded + mirrored
@@ -156,3 +239,58 @@ def streaming_step_pallas(
         out_shape=jax.ShapeDtypeStruct((b, ny_pad), jnp.float32),
         interpret=interpret,
     )(lengths.astype(jnp.int32), jt, L, qpow.reshape(1, -1), pq, w3)
+
+
+def streaming_step_pallas_q8(
+    j_seq: jax.Array,     # (B, T_pad, n_pad) f32; node padding must be zero
+    Lq: jax.Array,        # (n_pad, n_pad) int8 ring-matrix codes
+    qpow: jax.Array,      # (n_pad,) f32
+    lengths: jax.Array,   # (B,) int32
+    w3q: jax.Array,       # (ny_pad, n_pad, n_pad) int8 readout codes
+    scales: jax.Array,    # (4,) f32: [p, sx, sL, sw] (all > 0)
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    chunk_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized fused step: returns raw fp32 logits (B, ny_pad).
+
+    Same grid/padding contract as ``streaming_step_pallas``; the VMEM
+    residents shrink to int32 code tiles and the two hot dots run on int8
+    operands.  ``ops.streaming_logits_q8`` owns the code/scale prep (ring
+    codes from the fp32 ring matrix, readout codes from ``QuantParams``).
+    """
+    b, t_pad, n_pad = j_seq.shape
+    ny_pad = w3q.shape[0]
+    assert t_pad % chunk_t == 0, (t_pad, chunk_t)
+    assert n_pad % 128 == 0 and n_nodes < n_pad
+    jt = jnp.swapaxes(j_seq, 0, 1)  # (T, B, N): time-major for the grid
+
+    kernel = functools.partial(
+        _streaming_kernel_q8, f=f, chunk_t=chunk_t, n_nodes=n_nodes
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, t_pad // chunk_t),
+        in_specs=[
+            pl.BlockSpec((chunk_t, 1, n_pad), lambda bb, tc, len_ref: (tc, bb, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda bb, tc, len_ref: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda bb, tc, len_ref: (0, 0)),
+            pl.BlockSpec((1, 4), lambda bb, tc, len_ref: (0, 0)),
+            pl.BlockSpec((ny_pad, n_pad, n_pad), lambda bb, tc, len_ref: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ny_pad), lambda bb, tc, len_ref: (bb, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, n_pad), jnp.int32),
+            pltpu.VMEM((n_pad, n_pad), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, ny_pad), jnp.float32),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), jt, Lq.astype(jnp.int8),
+      qpow.astype(jnp.float32).reshape(1, -1),
+      scales.astype(jnp.float32).reshape(1, 4), w3q.astype(jnp.int8))

@@ -145,6 +145,41 @@ fused cohort refresh all survive sharding: payload uploads happen once
 a serving step is still ONE dispatch.  Try it on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (e.g.
 ``python examples/online_edge.py --devices 8``).
+
+Quantized int8 fast path + step blocking (PR 7)
+-----------------------------------------------
+
+Two serving-only accelerations (training, statistics and refresh math stay
+fp32 bit-for-bit):
+
+* ``quantize='int8'`` - the serving logits of ARMED slots come from the
+  int8 fused kernel (``kernels.streaming.streaming_step_pallas_q8`` /
+  its XLA oracle): readout weights and the recurrent reservoir state live
+  as int8 codes under per-slot symmetric scales, the reservoir mix, DPRR
+  accumulation and readout contract in int8 x int8 -> int32 integer
+  arithmetic, and only the final logits dequantize to fp32.  Calibration
+  is free: the fused serve step tracks the running reservoir-state absmax
+  in ``OnlineState.quant``, and the scales FOLD (requantize W, arm the
+  slot) inside the same cohort-refresh branch the Ridge re-solve already
+  rides - scale refresh costs zero extra dispatches and tracks every
+  retirement mode's weight updates.  Unarmed slots (no refresh boundary
+  crossed yet - e.g. during the SGD adaptation phase) serve fp32.  The
+  coded readout is ~4x smaller per slot than the fp32 ``(Ny, Nr)`` row
+  (BENCH_stream_quant records the measured accuracy band + throughput).
+
+* ``step_block=T`` - multi-sample step blocking: a ``lax.scan`` over the
+  fused pool step serves up to T windows per slot in ONE dispatch with one
+  stacked refresh-schedule upload and one prediction readback.  The host
+  clamps each block so no slot completes mid-block, so admissions (and
+  hence the entire continuous-batching schedule) land exactly where the
+  unblocked server puts them: a blocked episode reproduces the
+  ``step_block=1`` predictions exactly, across retirement modes,
+  pipeline depths and device counts.  ``step_block=1`` routes through the
+  PR-6 step functions unchanged (bitwise regression-pinned by
+  ``tests/golden/stream_fp32_golden.npz``).
+
+Both knobs compose with each other and with slot sharding
+(``tests/test_stream_quant.py``, ``tests/test_stream_sharded.py``).
 """
 from __future__ import annotations
 
@@ -279,6 +314,7 @@ def _step_core(
     fused_infer: bool = True,
     maintain_factor: bool = False,
     retirement: str = "none",
+    quantize: str = "none",
 ) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
     """One server step: infer-before-update + train for every live slot.
 
@@ -304,6 +340,20 @@ def _step_core(
     numerical guard - re-factorizes exactly those slots' live factors from
     their retained ``B + beta I`` (one cond-gated batched Cholesky, never
     executed on the clean steady-state path).
+
+    ``quantize='int8'`` (static) serves ARMED slots from the int8 fast
+    path (``ops.streaming_logits_slots_q8``: coded reservoir state +
+    readout, int8 x int8 -> int32 compute, fp32 dequantized logits) built
+    from the slot's PRE-update parameters - the same infer-before-update
+    contract as the fp32 paths.  A slot arms when its quantization scales
+    first fold at a ridge-refresh boundary (``online.fold_quant_rows``,
+    see ``_stream_step_pool_impl``); unarmed slots (``w_scale == 0``)
+    serve the fp32 logits, so early-phase accuracy never pays quantization
+    noise before calibration exists.  Training, statistics and refreshes
+    stay fp32 throughout - only serving logits change.  The serve step
+    additionally tracks the running reservoir-state absmax
+    (``track_state_absmax``) that calibrates the state scale at the next
+    fold.  ``quantize='none'`` compiles the exact PR-6 program.
     """
     f = cfg.f()
 
@@ -354,6 +404,7 @@ def _step_core(
                     maintain_factor="defer" if maintain_factor else False,
                     forget=forget if retirement == "forget" else None,
                     train=train,
+                    track_state_absmax=(quantize == "int8"),
                 )
             )(sts, u_, len_, y_, w_, lr_, a_)
         return go
@@ -378,6 +429,22 @@ def _step_core(
         logits = ops.streaming_logits_slots(
             j_seq, length, states.params.p, states.params.q,
             states.params.W, states.params.b, cfg.n_nodes, f=f,
+        )
+    if quantize == "int8":
+        # int8 fast path for ARMED slots (scales folded at least once):
+        # pre-update coded readout + coded recurrent state, integer
+        # reservoir/DPRR/readout compute, fp32 dequantized logits.  Unarmed
+        # slots (w_scale == 0: no refresh boundary crossed yet) keep the
+        # fp32 logits computed above - the select is per slot lane.
+        j_seq = masking.apply_mask(mask, u)
+        q_logits = ops.streaming_logits_slots_q8(
+            j_seq, length, states.params.p, states.params.q,
+            states.quant.Wq, states.quant.w_scale, states.quant.x_scale,
+            states.params.b, cfg.n_nodes, f=f,
+        )
+        armed = states.quant.w_scale > 0
+        logits = jnp.where(
+            armed[:, None, None], q_logits.astype(logits.dtype), logits
         )
     preds = jnp.argmax(logits, axis=-1)  # (S, W)
 
@@ -528,6 +595,7 @@ def _stream_step_pool_impl(
     retirement: str = "none",
     refresh_mode: str = "recompute",
     window: int = 1,
+    quantize: str = "none",
 ) -> Tuple[OnlineState, Optional[WindowState], Array]:
     """Device-resident serving step: cursor-indexed window gather from the
     staged ``RequestPool``, the fused serve step, and the cohort Ridge
@@ -540,6 +608,12 @@ def _stream_step_pool_impl(
     the exact math of the standalone ``_stream_refresh_rows`` /
     ``_stream_refresh_factor_rows`` entry points on the post-step state,
     preserving the PR-4 step->refresh ordering.
+
+    ``quantize='int8'`` folds the quantization scales of the refreshed
+    cohort in the SAME refresh branch (``online.fold_quant_rows``): the
+    freshly re-solved readout rows re-quantize immediately, so the int8
+    serving path is never staler than one refresh cadence, and scale
+    refreshes ride the existing dispatch for free.
     """
     u, length, label, weight = _gather_window(
         pool, cursor, live, window, cfg.dtype
@@ -548,7 +622,7 @@ def _stream_step_pool_impl(
         cfg, mask, states, fresh, fresh_mask, u, length, label, weight,
         live, lr, phase_steps, beta, forget, win,
         fused_infer=fused_infer, maintain_factor=maintain_factor,
-        retirement=retirement,
+        retirement=retirement, quantize=quantize,
     )
 
     def _refresh(st: OnlineState) -> OnlineState:
@@ -559,8 +633,12 @@ def _stream_step_pool_impl(
             & (st.ridge.count[refresh_rows] > 0)
         )
         if refresh_mode == "incremental":
-            return online.refresh_output_factor_rows(st, refresh_rows, el)
-        return online.refresh_output_rows(st, beta, refresh_rows, el)
+            st = online.refresh_output_factor_rows(st, refresh_rows, el)
+        else:
+            st = online.refresh_output_rows(st, beta, refresh_rows, el)
+        if quantize == "int8":
+            st = online.fold_quant_rows(st, refresh_rows, el)
+        return st
 
     new_states = jax.lax.cond(
         refresh_due, _refresh, lambda st: st, new_states
@@ -569,7 +647,7 @@ def _stream_step_pool_impl(
 
 
 _POOL_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement",
-                 "refresh_mode", "window")
+                 "refresh_mode", "window", "quantize")
 _stream_step_pool = jax.jit(
     _stream_step_pool_impl, static_argnames=_POOL_STATICS
 )
@@ -578,6 +656,95 @@ _stream_step_pool = jax.jit(
 # verbatim by the next step
 _stream_step_pool_donated = jax.jit(
     _stream_step_pool_impl, static_argnames=_POOL_STATICS,
+    donate_argnums=(2, 12),
+)
+
+
+def _stream_step_pool_block_impl(
+    cfg: DFRConfig,
+    mask: Array,
+    states: OnlineState,
+    fresh: OnlineState,
+    fresh_mask: Array,
+    pool: RequestPool,
+    cursor: Array,          # (S,) int32 cursors at the BLOCK start
+    live: Array,
+    lr: Array,
+    phase_steps: Array,
+    beta: Array,
+    forget: Array,
+    win: Optional[WindowState],
+    active_b: Array,        # (B,) bool: sub-step t actually runs
+    refresh_due_b: Array,   # (B,) bool per-sub-step refresh flags
+    refresh_rows_b: Array,  # (B, R) int32 per-sub-step padded cohort rows
+    refresh_ok_b: Array,    # (B, R) bool
+    fused_infer: bool = True,
+    maintain_factor: bool = False,
+    retirement: str = "none",
+    refresh_mode: str = "recompute",
+    window: int = 1,
+    quantize: str = "none",
+) -> Tuple[OnlineState, Optional[WindowState], Array]:
+    """Multi-sample step blocking: up to B = ``step_block`` consecutive
+    pool steps in ONE dispatch, a ``lax.scan`` over the fused serving step.
+
+    Each sub-step is exactly ``_stream_step_pool_impl`` (gather + serve +
+    cohort refresh) on an in-carry cursor advanced by ``window`` samples
+    per live slot per sub-step; the host ships one stacked refresh
+    schedule instead of B control uploads, and pays ONE dispatch + ONE
+    prediction readback for the whole block.  The schedule contract that
+    makes a blocked episode serve the unblocked one exactly:
+
+      * admission only happens at block starts (``fresh_mask`` is consumed
+        by sub-step 0 and zeroed in the carry), and
+      * the host clamps the active length so no live slot completes
+        mid-block (``StreamServer.step``) - so blocks end at every
+        retirement boundary and the slot lifecycle schedule is identical.
+
+    ``active_b`` keeps the executable fixed-shape: clamped blocks run with
+    tail sub-steps inactive (a ``lax.cond`` identity - dead sub-steps skip
+    the serve compute, not just its effects), so one program serves every
+    block length 1..B.  Returns predictions shaped (B, S, W); inactive
+    sub-steps yield zeros the host never reads.
+    """
+    S = live.shape[0]
+
+    def _sub(carry, xs):
+        st, w, cur, fm = carry
+        act, due, rows, ok = xs
+
+        def _run(oper):
+            st, w, cur, fm = oper
+            ns, nw, preds = _stream_step_pool_impl(
+                cfg, mask, st, fresh, fm, pool, cur, live, lr,
+                phase_steps, beta, forget, w, due, rows, ok,
+                fused_infer=fused_infer, maintain_factor=maintain_factor,
+                retirement=retirement, refresh_mode=refresh_mode,
+                window=window, quantize=quantize,
+            )
+            return ns, nw, preds.astype(jnp.int32)
+
+        def _skip(oper):
+            st, w, _, _ = oper
+            return st, w, jnp.zeros((S, window), jnp.int32)
+
+        ns, nw, preds = jax.lax.cond(act, _run, _skip, (st, w, cur, fm))
+        cur = cur + jnp.where(live & act, window, 0).astype(cur.dtype)
+        fm = jnp.zeros_like(fm)   # admissions only at the block start
+        return (ns, nw, cur, fm), preds
+
+    (states, win, _, _), preds = jax.lax.scan(
+        _sub, (states, win, cursor, fresh_mask),
+        (active_b, refresh_due_b, refresh_rows_b, refresh_ok_b),
+    )
+    return states, win, preds    # preds: (B, S, W)
+
+
+_stream_step_pool_block = jax.jit(
+    _stream_step_pool_block_impl, static_argnames=_POOL_STATICS
+)
+_stream_step_pool_block_donated = jax.jit(
+    _stream_step_pool_block_impl, static_argnames=_POOL_STATICS,
     donate_argnums=(2, 12),
 )
 
@@ -606,6 +773,13 @@ _SLOT, _REP = P("slot"), P()
 _POOL_IN_SPECS = (_REP, _SLOT, _REP, _SLOT, _SLOT, _SLOT, _SLOT, _REP,
                   _REP, _REP, _REP, _SLOT, _REP, _SLOT, _SLOT)
 _POOL_OUT_SPECS = (_SLOT, _SLOT, _SLOT)      # states, win, preds
+# blocked twin: the stacked (B, R) cohort row sets shard their SECOND axis
+# (shard-local fixed-width blocks per device, one row set per sub-step);
+# the (B,) active/due flags replicate; preds (B, S, W) shard axis 1
+_BLOCK_IN_SPECS = (_REP, _SLOT, _REP, _SLOT, _SLOT, _SLOT, _SLOT, _REP,
+                   _REP, _REP, _REP, _SLOT, _REP, _REP,
+                   P(None, "slot"), P(None, "slot"))
+_BLOCK_OUT_SPECS = (_SLOT, _SLOT, P(None, "slot"))
 _SHARDED_STEP_CACHE: Dict[Tuple, object] = {}
 _SHARDED_WRITE_CACHE: Dict[Mesh, object] = {}
 
@@ -621,6 +795,28 @@ def _sharded_pool_step(mesh: Mesh, cfg: DFRConfig, donate: bool, **statics):
         body = shard_map(
             partial(_stream_step_pool_impl, cfg, **statics),
             mesh=mesh, in_specs=_POOL_IN_SPECS, out_specs=_POOL_OUT_SPECS,
+            check_rep=False,
+        )
+        hit = _SHARDED_STEP_CACHE[key] = jax.jit(
+            body, donate_argnums=(1, 11) if donate else ()
+        )
+    return hit
+
+
+def _sharded_pool_block_step(
+    mesh: Mesh, cfg: DFRConfig, donate: bool, **statics
+):
+    """jit(shard_map(_stream_step_pool_block_impl)): the step-blocked scan
+    with every sub-step acting on the device-local slot block.  The scan
+    carries only slot-sharded or replicated values and the body is the
+    collective-free pool step, so a blocked sharded episode is bitwise the
+    blocked single-device episode (same argument as the unblocked twin)."""
+    key = ("block", mesh, cfg, donate, tuple(sorted(statics.items())))
+    hit = _SHARDED_STEP_CACHE.get(key)
+    if hit is None:
+        body = shard_map(
+            partial(_stream_step_pool_block_impl, cfg, **statics),
+            mesh=mesh, in_specs=_BLOCK_IN_SPECS, out_specs=_BLOCK_OUT_SPECS,
             check_rep=False,
         )
         hit = _SHARDED_STEP_CACHE[key] = jax.jit(
@@ -795,6 +991,26 @@ class StreamServer:
         (``S % n == 0``, ``staging='device'``; see the module docstring's
         slot-sharding section).  Bitwise the devices=1 episode; scales
         served-samples/sec with the device count (BENCH_stream_sharded).
+
+    Quantized serving fast path (PR 7):
+
+      * ``quantize='int8'`` - armed slots serve from int8 codes (readout
+        weights + recurrent reservoir state, symmetric per-slot scales;
+        int8 x int8 -> int32 reservoir/DPRR/readout compute, fp32
+        dequantized logits).  Scales calibrate from the running state
+        absmax and fold at ridge-refresh boundaries; a slot serves fp32
+        until its first fold (``w_scale == 0``), and training/statistics
+        stay fp32 always.  Requires ``staging='device'``.  ~4x smaller
+        serving-state readout bytes per slot; accuracy cost measured
+        honestly in BENCH_stream_quant.
+      * ``step_block=T`` - multi-sample step blocking: up to T consecutive
+        serving steps (T windows per slot) fuse into ONE dispatch via a
+        ``lax.scan`` over the pool step, amortizing dispatch overhead and
+        per-step control uploads.  Blocks clamp so no slot completes
+        mid-block, making the blocked episode serve the ``step_block=1``
+        episode exactly (same admissions, same refresh schedule, same
+        predictions).  Requires ``staging='device'``.  T=1 routes through
+        the unchanged PR-6 step functions.
     """
 
     def __init__(
@@ -820,6 +1036,8 @@ class StreamServer:
         pool_capacity: Optional[int] = None,
         latency_window: int = 4096,
         devices: int = 1,
+        quantize: str = "none",
+        step_block: int = 1,
     ):
         if refresh_mode not in ("recompute", "incremental"):
             raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
@@ -850,6 +1068,22 @@ class StreamServer:
             )
         if devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices!r}")
+        if quantize not in ("none", "int8"):
+            raise ValueError(f"unknown quantize: {quantize!r}")
+        if quantize == "int8" and staging != "device":
+            raise ValueError(
+                "quantize='int8' requires staging='device' (the scale fold "
+                "rides the fused cohort refresh of the pool step)"
+            )
+        if step_block < 1:
+            raise ValueError(
+                f"step_block must be >= 1, got {step_block!r}"
+            )
+        if step_block > 1 and staging != "device":
+            raise ValueError(
+                "step_block > 1 requires staging='device' (the blocked scan "
+                "gathers every sub-step's window from the staged pool)"
+            )
         if devices > 1:
             if staging != "device":
                 raise ValueError(
@@ -877,6 +1111,8 @@ class StreamServer:
         self.staging = staging
         self.pipeline_depth = int(pipeline_depth)
         self.donate = bool(donate)
+        self.quantize = quantize
+        self.step_block = int(step_block)
         self._np_dtype = np.dtype(cfg.dtype)
         self.cohorts = RefreshCohorts(
             self.max_streams, self.refresh_every, refresh_cohorts
@@ -959,6 +1195,7 @@ class StreamServer:
         # fresh masks only move on admission/retirement)
         self._mask_cache: Dict[bytes, Array] = {}
         self._due_cache: Dict[int, Tuple[Array, Array, Array]] = {}
+        self._due_block_cache: Dict[Tuple, Tuple] = {}
         self.global_step = 0
         # async pipeline: (device preds, per-slot bookkeeping meta) entries,
         # drained once more than pipeline_depth steps are in flight
@@ -1079,6 +1316,40 @@ class StreamServer:
             )
         return hit
 
+    def _cached_due_block(
+        self, start: int, b_active: int
+    ) -> Tuple[Array, Array, Array, Array]:
+        """Stacked refresh schedule for a step block: the per-sub-step
+        (due, rows, ok) triples for steps ``start .. start + B - 1`` plus
+        the (B,) active flags for a clamped block.  The schedule cycles
+        with period ``refresh_every`` (like ``_cached_due``), so the
+        device copies are cached by (phase, active length)."""
+        key = (start % self.refresh_every, b_active)
+        hit = self._due_block_cache.get(key)
+        if hit is None:
+            B = self.step_block
+            dues, rows, oks = [], [], []
+            for t in range(B):
+                if self.devices > 1:
+                    d, r, o = self.cohorts.due_rows_fixed_sharded(
+                        start + t, self.devices
+                    )
+                else:
+                    d, r, o = self.cohorts.due_rows_fixed(start + t)
+                dues.append(np.asarray(d))
+                rows.append(np.asarray(r))
+                oks.append(np.asarray(o))
+            active = np.arange(B) < b_active
+            # inactive tail sub-steps are cond-skipped anyway; zeroing
+            # their due flags keeps the cached schedule canonical
+            hit = self._due_block_cache[key] = (
+                jnp.asarray(active),
+                jnp.asarray(np.stack(dues).astype(bool) & active),
+                jnp.asarray(np.stack(rows)),
+                jnp.asarray(np.stack(oks)),
+            )
+        return hit
+
     # -- the serving loop --------------------------------------------------------
 
     def step(self) -> None:
@@ -1100,12 +1371,29 @@ class StreamServer:
         live = np.zeros((S,), bool)
         fresh_mask = np.zeros((S,), bool)
         fresh_mask[self._admitted_this_step] = True
+        slots = list(self.sched.live())
         meta: List[Tuple] = []
-        for i, req in self.sched.live():
+        for i, req in slots:
             lo = int(self.slot_pos[i])
             n = min(W, req.n_samples - lo)
             live[i] = True
-            meta.append((i, req, lo, n))
+            meta.append((0, i, req, lo, n))
+
+        # step blocking: clamp the block so no live slot completes inside
+        # it - blocks then end at every retirement boundary, so admission
+        # timing (and with it the whole slot lifecycle schedule) matches
+        # the step_block=1 episode exactly
+        b_active = 1
+        if self.step_block > 1 and slots:
+            b_active = self.step_block
+            for _t, i, req, lo, n in meta:
+                b_active = min(b_active, -(-(req.n_samples - lo) // W))
+            b_active = max(1, b_active)
+            for t in range(1, b_active):
+                for i, req in slots:
+                    lo = int(self.slot_pos[i]) + t * W
+                    n = min(W, req.n_samples - lo)
+                    meta.append((t, i, req, lo, n))
 
         step_kw = dict(
             fused_infer=self.fused_infer,
@@ -1113,31 +1401,52 @@ class StreamServer:
             retirement=self.retirement,
         )
         if self.staging == "device":
-            due, rows, ok = self._cached_due(self.global_step + 1)
-            if self.mesh is not None:
-                step_fn = _sharded_pool_step(
-                    self.mesh, self.cfg, self.donate,
-                    refresh_mode=self.refresh_mode, window=W, **step_kw,
+            pool_kw = dict(
+                refresh_mode=self.refresh_mode, window=W,
+                quantize=self.quantize, **step_kw,
+            )
+            operands = (
+                self.mask, self.states, self._fresh_row,
+                self._cached_mask(fresh_mask), self.pool,
+                jnp.asarray(self.slot_pos.astype(np.int32)),
+                self._cached_mask(live), self.lr, self.phase_steps,
+                self.beta, self.forget, self.win,
+            )
+            if self.step_block > 1:
+                active, due_b, rows_b, ok_b = self._cached_due_block(
+                    self.global_step + 1, b_active
                 )
-                self.states, self.win, preds = step_fn(
-                    self.mask, self.states, self._fresh_row,
-                    self._cached_mask(fresh_mask), self.pool,
-                    jnp.asarray(self.slot_pos.astype(np.int32)),
-                    self._cached_mask(live), self.lr, self.phase_steps,
-                    self.beta, self.forget, self.win, due, rows, ok,
-                )
+                if self.mesh is not None:
+                    step_fn = _sharded_pool_block_step(
+                        self.mesh, self.cfg, self.donate, **pool_kw
+                    )
+                    self.states, self.win, preds = step_fn(
+                        *operands, active, due_b, rows_b, ok_b
+                    )
+                else:
+                    step_fn = (_stream_step_pool_block_donated if self.donate
+                               else _stream_step_pool_block)
+                    self.states, self.win, preds = step_fn(
+                        self.cfg, *operands, active, due_b, rows_b, ok_b,
+                        **pool_kw,
+                    )
+                self.global_step += b_active
             else:
-                step_fn = (_stream_step_pool_donated if self.donate
-                           else _stream_step_pool)
-                self.states, self.win, preds = step_fn(
-                    self.cfg, self.mask, self.states, self._fresh_row,
-                    self._cached_mask(fresh_mask), self.pool,
-                    jnp.asarray(self.slot_pos.astype(np.int32)),
-                    self._cached_mask(live), self.lr, self.phase_steps,
-                    self.beta, self.forget, self.win, due, rows, ok,
-                    refresh_mode=self.refresh_mode, window=W, **step_kw,
-                )
-            self.global_step += 1
+                due, rows, ok = self._cached_due(self.global_step + 1)
+                if self.mesh is not None:
+                    step_fn = _sharded_pool_step(
+                        self.mesh, self.cfg, self.donate, **pool_kw
+                    )
+                    self.states, self.win, preds = step_fn(
+                        *operands, due, rows, ok
+                    )
+                else:
+                    step_fn = (_stream_step_pool_donated if self.donate
+                               else _stream_step_pool)
+                    self.states, self.win, preds = step_fn(
+                        self.cfg, *operands, due, rows, ok, **pool_kw,
+                    )
+                self.global_step += 1
         else:
             # PR-4 host staging: rebuild + upload the padded window batch
             # (in cfg.dtype - the PR-4 code hardcoded float32 here, silently
@@ -1146,7 +1455,7 @@ class StreamServer:
             length = np.ones((S, W), np.int32)  # dead samples: len 1, w 0
             label = np.zeros((S, W), np.int32)
             weight = np.zeros((S, W), self._np_dtype)
-            for i, req, lo, n in meta:
+            for _t, i, req, lo, n in meta:
                 u[i, :n] = req.u[lo:lo + n]
                 length[i, :n] = req.length[lo:lo + n]
                 label[i, :n] = req.label[lo:lo + n]
@@ -1179,8 +1488,11 @@ class StreamServer:
 
         # dispatch-time bookkeeping: the slot lifecycle is cursor-driven
         # (independent of prediction values), so retirement/refill never
-        # waits on the device - only the metric bookkeeping rides the ring
-        for i, req, lo, n in meta:
+        # waits on the device - only the metric bookkeeping rides the ring.
+        # Meta is sub-step-major, so a blocked step's cursor advances
+        # accumulate in schedule order and a slot retires exactly at its
+        # block's end (the clamp guarantees no earlier completion).
+        for _t, i, req, lo, n in meta:
             self.slot_pos[i] += n
             if self.slot_pos[i] >= req.n_samples:
                 req.final_state = self._snapshot_row(i)
@@ -1198,9 +1510,11 @@ class StreamServer:
         t0 = time.perf_counter()
         preds_np = np.asarray(preds)   # blocks: the served predictions
         self.drain_times_s.append(time.perf_counter() - t0)
-        for i, req, lo, n in meta:
+        for t, i, req, lo, n in meta:
+            # blocked steps return (B, S, W); unblocked return (S, W)
+            block = preds_np[t] if preds_np.ndim == 3 else preds_np
             for k in range(n):
-                pred = int(preds_np[i, k])
+                pred = int(block[i, k])
                 req.preds.append(pred)
                 req.correct += int(pred == int(req.label[lo + k]))
             if lo + n >= req.n_samples:

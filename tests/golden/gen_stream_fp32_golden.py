@@ -1,0 +1,101 @@
+"""Generate the fp32 serving golden fixture (PR-6 baseline).
+
+Run from the repo root with the *pre-quantization* tree checked out:
+
+    PYTHONPATH=src python tests/golden/gen_stream_fp32_golden.py
+
+The fixture pins the exact predictions and final model state of a full
+multi-admission/retire episode in every retirement mode, so later PRs can
+prove the fp32 serving path stayed bitwise identical.  The episode shape
+mirrors tests/test_stream_pipeline.py (more streams than slots, ragged
+lengths, tail windows, refresh cohorts firing mid-episode).
+
+Regenerate ONLY when a PR intentionally changes fp32 serving numerics --
+and say so in the PR description.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.core.types import DFRConfig  # noqa: E402
+from repro.runtime import StreamRequest, StreamServer  # noqa: E402
+
+CFG = DFRConfig(n_in=2, n_classes=3, n_nodes=8)
+
+MODES = (
+    ("none", {}),
+    ("none-inc", {"refresh_mode": "incremental"}),
+    ("forget", {"refresh_mode": "incremental", "retirement": "forget",
+                "forget": 0.9}),
+    ("window", {"refresh_mode": "incremental", "retirement": "window",
+                "retire_window": 6}),
+)
+
+# (name, leaf getter) -- the PR-6 OnlineState leaves; later PRs may add
+# leaves (e.g. quantization state) which are deliberately NOT pinned here
+STATE_LEAVES = (
+    ("params_p", lambda s: s.params.p),
+    ("params_q", lambda s: s.params.q),
+    ("params_W", lambda s: s.params.W),
+    ("params_b", lambda s: s.params.b),
+    ("ridge_A", lambda s: s.ridge.A),
+    ("ridge_B", lambda s: s.ridge.B),
+    ("ridge_count", lambda s: s.ridge.count),
+    ("ridge_Lt", lambda s: s.ridge.Lt),
+    ("ridge_factor_beta", lambda s: s.ridge.factor_beta),
+    ("step", lambda s: s.step),
+    ("loss_ema", lambda s: s.loss_ema),
+)
+
+
+def make_stream(rid, n, t=16, seed=0, n_in=2, n_classes=3):
+    r = np.random.default_rng(seed)
+    return StreamRequest(
+        rid=rid,
+        u=r.normal(size=(n, t, n_in)).astype(np.float32),
+        length=r.integers(4, t + 1, n).astype(np.int32),
+        label=r.integers(0, n_classes, n).astype(np.int32),
+    )
+
+
+def episode_streams(seed0=0):
+    return [make_stream(i, n, seed=seed0 + i)
+            for i, n in enumerate([8, 6, 10, 4, 7])]
+
+
+def serve(mode_kw):
+    srv = StreamServer(CFG, t_max=16, max_streams=3, window=2,
+                       phase_steps=2, refresh_every=3, **mode_kw)
+    for s in episode_streams():
+        srv.submit(s)
+    done = srv.run_until_drained()
+    return done, srv
+
+
+def main():
+    out = {
+        "jax_version": np.array(jax.__version__),
+        "platform": np.array(jax.default_backend()),
+    }
+    for mode, kw in MODES:
+        done, srv = serve(kw)
+        for r in sorted(done, key=lambda r: r.rid):
+            out[f"{mode}/preds/{r.rid}"] = np.asarray(r.preds, np.int32)
+        for name, get in STATE_LEAVES:
+            out[f"{mode}/state/{name}"] = np.asarray(get(srv.states))
+        print(f"{mode}: {sum(len(r.preds) for r in done)} preds, "
+              f"global_step={srv.global_step}")
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "stream_fp32_golden.npz")
+    np.savez_compressed(path, **out)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

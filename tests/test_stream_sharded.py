@@ -182,6 +182,32 @@ def test_sharded_pool_growth_mid_service():
     _assert_bitwise(srv_1.states, srv_4.states)
 
 
+@needs_devices
+@pytest.mark.parametrize("devices", [2, 8])
+def test_sharded_quantized_episode_is_bitwise_single_device(devices):
+    """quantize='int8' (PR 7) composes with slot sharding: the sharded
+    quantized episode - per-slot scale folds riding the shard-local cohort
+    refresh, int8 serving logits per device block - is bitwise the
+    single-device quantized episode, quant leaves included."""
+    preds_1, srv_1 = _serve(1, quantize="int8")
+    preds_n, srv_n = _serve(devices, quantize="int8")
+    assert preds_1 == preds_n
+    _assert_bitwise(srv_1.states, srv_n.states)   # includes states.quant
+
+
+@needs_devices
+def test_sharded_blocked_quantized_parity():
+    """step_block (PR 7) composes with sharding and quantization: the
+    8-device blocked quantized episode equals the single-device blocked
+    quantized one bitwise, and both serve the unblocked quantized
+    predictions exactly (the block clamp pins the schedule)."""
+    preds_u, _ = _serve(1, quantize="int8")
+    preds_1, srv_1 = _serve(1, quantize="int8", step_block=3)
+    preds_8, srv_8 = _serve(8, quantize="int8", step_block=3)
+    assert preds_u == preds_1 == preds_8
+    _assert_bitwise(srv_1.states, srv_8.states)
+
+
 # ---------------------------------------------------------------------------
 # Placement: the device-local invariant, structurally
 # ---------------------------------------------------------------------------
