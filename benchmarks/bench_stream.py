@@ -482,32 +482,17 @@ def _infer_step_cost(n_nodes: int, n_classes: int, n_streams: int,
     elementwise (invisible to the model).  The columns are therefore
     per-program absolute costs for trend tracking, NOT a cross-path
     speedup ratio.
+
+    Delegates to ``runtime.planner.program_cost``, which memoizes the
+    lower+compile per distinct ``(Nx, n_classes, S, window, t_len,
+    quantize)`` - bench sweeps that revisit a shape (every policy column
+    of a row, every rep) no longer pay a redundant XLA compile.
     """
-    import functools
+    from repro.runtime import planner
 
-    from repro.kernels import ops
-    from repro.launch import hlo_cost
-
-    S, W, T, Nx = n_streams, window, t_len, n_nodes
-    nr = Nx * (Nx + 1)
-    j = jnp.zeros((S, W, T, Nx), jnp.float32)
-    lengths = jnp.full((S, W), T, jnp.int32)
-    p = jnp.full((S,), 0.5, jnp.float32)
-    q = jnp.full((S,), 0.4, jnp.float32)
-    b = jnp.zeros((S, n_classes), jnp.float32)
-    if quantize == "int8":
-        wq = jnp.zeros((S, n_classes, nr), jnp.int8)
-        sc = jnp.full((S,), 0.01, jnp.float32)
-        fn = jax.jit(functools.partial(
-            ops.streaming_logits_slots_q8, n_nodes=Nx))
-        lowered = fn.lower(j, lengths, p, q, wq, sc, sc, b)
-    else:
-        wf = jnp.zeros((S, n_classes, nr), jnp.float32)
-        fn = jax.jit(functools.partial(
-            ops.streaming_logits_slots, n_nodes=Nx))
-        lowered = fn.lower(j, lengths, p, q, wf, b)
-    cost = hlo_cost.analyze(lowered.compile().as_text())
-    return {"flops": cost.flops, "mem_bytes": cost.mem_bytes}
+    flops, mem_bytes = planner.program_cost(
+        n_nodes, n_classes, n_streams, window, t_len, quantize)
+    return {"flops": flops, "mem_bytes": mem_bytes}
 
 
 # ---------------------------------------------------------------------------
@@ -678,6 +663,7 @@ def _bench_quant_case(n_streams: int, n_samples: int, t_len: int,
         "table": "stream-quant",
         "cell": f"S{n_streams}/Nx{n_nodes}/W{window}",
         "samples": n_samples,
+        "t_len": t_len,     # the planner replay gate re-prices this row
     }
     base_time = best["fp32"]
     for name, _ in QUANT_POLICIES:
@@ -776,6 +762,118 @@ def run_quant(full: bool = False, smoke: bool = False) -> List[Dict]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Planner-validation table (ISSUE 8): measured lattice vs the cost model
+# ---------------------------------------------------------------------------
+
+#: the searched performance-knob lattice, named for the bench columns
+PLANNER_LATTICE: Tuple[Tuple[str, Dict], ...] = (
+    ("rec_b1", {"refresh_mode": "recompute", "step_block": 1}),
+    ("inc_b1", {"refresh_mode": "incremental", "step_block": 1}),
+    ("rec_b4", {"refresh_mode": "recompute", "step_block": 4}),
+    ("inc_b4", {"refresh_mode": "incremental", "step_block": 4}),
+)
+
+#: the ROADMAP contract: auto pick within 1.3x of the measured best
+PLANNER_GATE = 1.3
+
+
+def _bench_planner_case(n_streams: int, n_samples: int, t_len: int,
+                        n_nodes: int, window: int, reps: int = 3,
+                        refresh_every: int = 5) -> Dict:
+    """One planner-validation cell: measure every config of the knob
+    lattice (PR-5 paired round-robin discipline, best-of-reps per config),
+    then ask ``runtime.planner`` to rank the SAME configs from its
+    calibrated cost model alone.  The row records both rankings and the
+    gate: the planner's pick must serve within ``PLANNER_GATE`` (1.3x) of
+    the measured-best config's samples/sec.  ``ok=False`` rows make
+    ``--planner`` exit nonzero - the CI teeth of ``config='auto'``.
+    """
+    from repro.runtime import planner as rplanner
+
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=n_nodes)
+    phase_steps = 4
+    assert n_samples % window == 0
+    total_samples = n_streams * n_samples
+
+    def run_once(kw):
+        streams = _make_streams(n_streams, n_samples, t_len, 3, 4)
+        elapsed, _ = _serve_batched(
+            cfg, streams, t_len, window, phase_steps, refresh_every, **kw,
+        )
+        return elapsed
+
+    for _, kw in PLANNER_LATTICE:       # warm every jitted program first
+        run_once(kw)
+    best: Dict[str, float] = {}
+    for _ in range(reps):
+        for name, kw in PLANNER_LATTICE:
+            t = run_once(kw)
+            if name not in best or t < best[name]:
+                best[name] = t
+
+    cal = rplanner.get_calibration()
+    predicted = {
+        name: rplanner.predict_step_cost(
+            n_nodes, n_streams, window, "none", kw["refresh_mode"], 1,
+            kw["step_block"], "none", n_classes=4, t_len=t_len,
+            refresh_every=refresh_every, cal=cal,
+        )
+        for name, kw in PLANNER_LATTICE
+    }
+    measured = {n: total_samples / t for n, t in best.items()}
+    pick = min(predicted, key=predicted.get)
+    meas_best = max(measured, key=measured.get)
+    ratio = measured[meas_best] / measured[pick]
+
+    row: Dict = {
+        "table": "stream-planner",
+        "cell": f"S{n_streams}/Nx{n_nodes}/W{window}",
+        "samples": n_samples,
+        "t_len": t_len,
+        "refresh_every": refresh_every,
+    }
+    for name, _ in PLANNER_LATTICE:
+        row[f"{name}_samples_per_s"] = round(measured[name], 1)
+        row[f"{name}_predicted_samples_per_s"] = round(
+            1.0 / predicted[name], 1)
+    row["planner_pick"] = pick
+    row["measured_best"] = meas_best
+    row["best_over_pick_ratio"] = round(ratio, 3)
+    row["gate"] = PLANNER_GATE
+    row["ok"] = bool(ratio <= PLANNER_GATE)
+    return row
+
+
+def run_planner(full: bool = False, smoke: bool = False) -> List[Dict]:
+    """The planner-validation table (tracked in BENCH_stream_planner.json).
+
+    Cells span the regimes where the lattice's winner is known to flip:
+    Nx=16/W=1 (refresh-bound - incremental wins), Nx=8/W=1
+    (dispatch-bound - step blocking wins), and in ``--full`` the Nx=8/W=8
+    mass-arrival column where recompute historically wins.  Rows also
+    replay the tracked quant table through the model
+    (``planner.replay_bench_tables``), so regenerating this table
+    re-validates the planner against every benched shape at once.
+    """
+    from repro.runtime import planner as rplanner
+
+    if smoke:
+        cases = [(4, 8, 16, 8, 1)]
+    elif full:
+        cases = [(16, 20, 24, 16, 1), (16, 20, 24, 8, 1),
+                 (16, 80, 24, 8, 8), (32, 20, 24, 16, 1)]
+    else:
+        cases = [(16, 20, 24, 16, 1), (16, 20, 24, 8, 1)]
+    rows = [_bench_planner_case(*c) for c in cases]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for rep in rplanner.replay_bench_tables(root):
+        rep["table"] = "stream-planner-replay"
+        rep["gate"] = PLANNER_GATE
+        rows.append(rep)
+    return rows
+
+
 def run(full: bool = False, smoke: bool = False) -> List[Dict]:
     # The batched step amortizes dispatch + the per-window small-op work
     # across all S slots; the headline Nx=8/S=16 regime is where the >= 3x
@@ -844,6 +942,9 @@ def main() -> None:
                          "virtual devices in a subprocess when needed)")
     ap.add_argument("--quant", action="store_true",
                     help="the int8 fast-path + step-blocking table only")
+    ap.add_argument("--planner", action="store_true",
+                    help="the planner-validation table only; exits nonzero "
+                         "when the auto pick misses the 1.3x gate")
     ap.add_argument("--json", action="store_true",
                     help="emit rows as JSON lines (machine readable)")
     args = ap.parse_args()
@@ -851,10 +952,19 @@ def main() -> None:
         rows = run_sharded(full=args.full, smoke=args.smoke)
     elif args.quant:
         rows = run_quant(full=args.full, smoke=args.smoke)
+    elif args.planner:
+        rows = run_planner(full=args.full, smoke=args.smoke)
     else:
         rows = run(full=args.full, smoke=args.smoke)
     for row in rows:
         print(json.dumps(row) if args.json else row)
+    if args.planner:
+        bad = [r for r in rows if r.get("ok") is False]
+        if bad:
+            cells = ", ".join(r.get("cell", "?") for r in bad)
+            print(f"PLANNER GATE FAILED ({PLANNER_GATE}x): {cells}",
+                  file=sys.stderr)
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

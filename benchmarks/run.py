@@ -27,7 +27,8 @@ def main() -> None:
                     help="all 12 datasets at full Table-4 sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma list: ridge,backprop,truncation,system,"
-                         "population,stream,stream_quant,roofline")
+                         "population,stream,stream_quant,stream_planner,"
+                         "roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_backprop, bench_population, bench_ridge,
@@ -43,6 +44,7 @@ def main() -> None:
         "stream": lambda: bench_stream.run(args.full),
         "stream_sharded": lambda: bench_stream.run_sharded(args.full),
         "stream_quant": lambda: bench_stream.run_quant(args.full),
+        "stream_planner": lambda: bench_stream.run_planner(args.full),
         "roofline": lambda: roofline.summary_csv(),
     }
     # opt-in only: the sharded sweep re-execs under 8 forced XLA devices,
@@ -91,6 +93,19 @@ _BENCH_JSON = {
         "a cross-path ratio; quant-drift rows track the int8 accuracy "
         "band (training stays fp32, so deltas are pure serving-path "
         "rounding)",
+    ),
+    "stream_planner": (
+        "BENCH_stream_planner.json",
+        "cost-model planner picks vs measured knob-lattice best",
+        "stream-planner rows measure every config of the knob lattice "
+        "(round-robin best-of-reps) and record the calibrated planner's "
+        "pick; ok=false means the pick's MEASURED samples/sec fell more "
+        "than the 1.3x gate below the measured best (CI fails on it). "
+        "stream-planner-replay rows re-price the tracked "
+        "BENCH_stream_quant measurements through the same model - they "
+        "validate ranking only, no wall-clock of their own. predicted_* "
+        "columns are model outputs: calibrated to this host, never "
+        "comparable across hosts",
     ),
 }
 

@@ -89,27 +89,53 @@ from repro.runtime import StreamRequest, StreamServer
 
 
 def _server_retirement_kw(args) -> dict:
-    """Map --forget / --retire-window to StreamServer retirement kwargs."""
+    """Map --forget / --retire-window to StreamServer retirement kwargs.
+
+    ``refresh_mode`` stays ``None`` when the flag was not given, so
+    ``--config auto`` can plan it; the retirement policies still pin
+    ``incremental`` explicitly (a semantic requirement, not a tuning
+    choice - window retirement downdates a live factor)."""
     if args.forget is not None and args.retire_window is not None:
         raise SystemExit("pick one of --forget / --retire-window")
     if args.forget is not None:
         return {"retirement": "forget", "forget": args.forget,
-                "refresh_mode": "incremental"}
+                "refresh_mode": args.refresh_mode or "incremental"}
     if args.retire_window is not None:
         return {"retirement": "window", "retire_window": args.retire_window,
-                "refresh_mode": "incremental"}
+                "refresh_mode": args.refresh_mode or "incremental"}
     return {"refresh_mode": args.refresh_mode}
 
 
 def _server_pipeline_kw(args) -> dict:
-    """Map the serving-pipeline flags to StreamServer kwargs (PR 5/6)."""
+    """Map the serving-pipeline flags to StreamServer kwargs (PR 5/6/8).
+
+    Unset knobs pass ``None`` through: the server resolves them to the
+    historical defaults, or - under ``--config auto`` - to the calibrated
+    planner's picks."""
     return {
         "pipeline_depth": args.pipeline_depth,
         "staging": "host" if args.host_staging else "device",
         "devices": args.devices,
         "quantize": args.quantize,
         "step_block": args.step_block,
+        "config": args.config,
     }
+
+
+def _fmt_ms(v) -> str:
+    """A latency percentile for humans: NaN means 'no records', never a
+    fake 0.0 ms reading."""
+    return "n/a" if np.isnan(v) else f"{v:.1f} ms"
+
+
+def _print_plan(server) -> None:
+    if server.plan is not None:
+        pl = server.plan
+        print(f"  auto config (calibrated planner): "
+              f"refresh_mode={server.refresh_mode}, "
+              f"refresh_cohorts={server.cohorts.n_cohorts}, "
+              f"step_block={server.step_block} "
+              f"(predicted {pl.predicted_samples_per_s:.0f} samples/s)")
 
 
 def _effective_max_streams(args) -> int:
@@ -155,6 +181,7 @@ def run_drift(args) -> None:
     print(f"serving {len(streams)} drifting NARMA streams x {n} samples "
           f"(switch at sample {switches[0]}; retirement={policy})")
     _print_mesh(server)
+    _print_plan(server)
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()
@@ -168,14 +195,15 @@ def run_drift(args) -> None:
               f"{at:.3f} / post {post:.3f} "
               f"({int(r.final_state.ridge.count)} samples in (A,B))")
     lat = server.latency_percentiles_ms()
-    print(f"  window-round latency p50 {lat['p50_ms']:.1f} ms / "
-          f"p99 {lat['p99_ms']:.1f} ms over {server.global_step} rounds "
+    print(f"  window-round latency p50 {_fmt_ms(lat['p50_ms'])} / "
+          f"p99 {_fmt_ms(lat['p99_ms'])} over {server.global_step} rounds "
           f"(p99 absorbs the one-time jit compile at these few rounds; "
           f"bench_stream reports warmed steady-state latency)")
     if server.pipeline_depth > 0:
         print(f"  pipeline depth {server.pipeline_depth}: dispatch p50 "
-              f"{lat['dispatch_p50_ms']:.1f} ms, drain (sync) p50 "
-              f"{lat['drain_p50_ms']:.1f} / p99 {lat['drain_p99_ms']:.1f} ms")
+              f"{_fmt_ms(lat['dispatch_p50_ms'])}, drain (sync) p50 "
+              f"{_fmt_ms(lat['drain_p50_ms'])} / "
+              f"p99 {_fmt_ms(lat['drain_p99_ms'])}")
 
 
 def main():
@@ -189,13 +217,15 @@ def main():
                     help="server slots (< streams exercises refill)")
     ap.add_argument("--window", type=int, default=4)
     ap.add_argument("--refresh-mode", choices=("recompute", "incremental"),
-                    default="recompute",
+                    default=None,
                     help="periodic ridge refresh: re-factorize B (O(s^3)) "
                          "or keep a live rank-1-updated Cholesky factor per "
-                         "slot (O(s^2) solves)")
-    ap.add_argument("--refresh-cohorts", type=int, default=1,
+                         "slot (O(s^2) solves); default recompute, or the "
+                         "planner's pick under --config auto")
+    ap.add_argument("--refresh-cohorts", type=int, default=None,
                     help="stagger the refresh round over this many "
-                         "round-robin slot cohorts (1 = global round)")
+                         "round-robin slot cohorts (default 1 = global "
+                         "round, or the planner's pick under --config auto)")
     ap.add_argument("--forget", type=float, default=None, metavar="LAMBDA",
                     help="forgetting-factor retirement: decay (A, B) and "
                          "the live factor by lambda per accumulated sample "
@@ -225,12 +255,20 @@ def main():
                          "reservoir/DPRR/readout compute, fp32 dequantized "
                          "logits; scales fold at ridge-refresh boundaries "
                          "and training stays fp32 (requires device staging)")
-    ap.add_argument("--step-block", type=int, default=1, metavar="T",
+    ap.add_argument("--step-block", type=int, default=None, metavar="T",
                     help="multi-sample step blocking: fuse up to T window "
                          "rounds per slot into ONE dispatch (PR 7); blocks "
                          "clamp at retirement boundaries so the served "
                          "episode is exactly the T=1 one (requires device "
-                         "staging)")
+                         "staging; default 1, or the planner's pick under "
+                         "--config auto)")
+    ap.add_argument("--config", choices=("auto",), default=None,
+                    help="'auto': fill the unset performance knobs "
+                         "(--refresh-mode / --refresh-cohorts / "
+                         "--step-block) from the calibrated cost-model "
+                         "planner (PR 8; first run on a host pays a few "
+                         "seconds of micro-calibration, persisted to "
+                         ".planner_calibration.json)")
     ap.add_argument("--host-staging", action="store_true",
                     help="use the PR-4 host-staged batch build instead of "
                          "the device-resident request pool (A/B baseline; "
@@ -283,6 +321,7 @@ def main():
           f"retirement={server.retirement}) - the paper's protocol, "
           f"train-while-serve")
     _print_mesh(server)
+    _print_plan(server)
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()
@@ -292,12 +331,13 @@ def main():
               f"{r.online_accuracy:.3f} "
               f"({int(r.final_state.ridge.count)} samples in (A,B))")
     lat = server.latency_percentiles_ms()
-    print(f"  window-round latency p50 {lat['p50_ms']:.1f} ms / "
-          f"p99 {lat['p99_ms']:.1f} ms over {server.global_step} rounds")
+    print(f"  window-round latency p50 {_fmt_ms(lat['p50_ms'])} / "
+          f"p99 {_fmt_ms(lat['p99_ms'])} over {server.global_step} rounds")
     if server.pipeline_depth > 0:
         print(f"  pipeline depth {server.pipeline_depth}: dispatch p50 "
-              f"{lat['dispatch_p50_ms']:.1f} ms, drain (sync) p50 "
-              f"{lat['drain_p50_ms']:.1f} / p99 {lat['drain_p99_ms']:.1f} ms")
+              f"{_fmt_ms(lat['dispatch_p50_ms'])}, drain (sync) p50 "
+              f"{_fmt_ms(lat['drain_p50_ms'])} / "
+              f"p99 {_fmt_ms(lat['drain_p99_ms'])}")
 
     # held-out evaluation with the best stream's retired model: refresh the
     # readout from its streamed statistics, then classify the test split

@@ -26,9 +26,17 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f64": 8, "f32": 4, "tf32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    # sub-byte element types are storage-padded to one byte outside packed
+    # custom calls; HBM accounting charges the padded width
+    "s4": 1, "u4": 1, "s2": 1, "u2": 1, "s1": 1, "u1": 1,
+    # opaque control/token values occupy no HBM
+    "token": 0, "opaque": 0,
 }
 
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
@@ -57,7 +65,16 @@ def _shape_bytes(dtype: str, dims: str) -> float:
     if dims:
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    width = _DTYPE_BYTES.get(dtype)
+    if width is None:
+        # a silent 4-byte default mis-prices every narrow-dtype buffer by
+        # 4x (the int8 serving path hit exactly this) - fail loudly so new
+        # HLO dtypes get an explicit entry instead of a wrong guess
+        raise ValueError(
+            f"unrecognized HLO element type {dtype!r} (dims=[{dims}]); add "
+            f"its byte width to launch.hlo_cost._DTYPE_BYTES"
+        )
+    return n * width
 
 
 def _shape_elems(dims: str) -> int:

@@ -1,0 +1,592 @@
+"""Calibrated analytical cost-model planner for the stream server.
+
+The serving stack has re-grown the problem the paper set out to kill:
+offline grid search.  Refresh mode flips winners with (window, Nx) (PR 3's
+honest table), retirement overhead swings 0.35x-1.06x with Nx (PR 4),
+step blocking pays off exactly when dispatch overhead dominates (PR 7),
+and the int8 fast path loses wall-clock on CPU while winning bytes (PR 7's
+honest columns).  Every new knob multiplies the hand-curated bench tables.
+
+This module replaces the table lookup with the MATCH/ZigZag pattern
+(SNIPPETS.md Snippet 1): a small analytical cost model - per-primitive
+coefficients x exact work counts - that a scheduler searches.  Three
+ingredients:
+
+* **Micro-calibration** (``calibrate``): a short one-time run times six
+  primitives on THIS host/backend - dispatch overhead, dot FLOP, HBM
+  byte, cholupdate rotation element, triangular-substitution element,
+  Cholesky-factorization element, quant/requant element - each normalized
+  by the exact FLOPs/bytes of its own lowered program
+  (``launch.hlo_cost``), so the coefficients are seconds-per-unit-of-work,
+  not seconds-per-benchmark.  The result persists to a small JSON
+  (``REPRO_PLANNER_CAL`` env var, default ``.planner_calibration.json``
+  in the working directory) keyed by a host/backend fingerprint, so
+  repeated servers skip re-measurement.
+
+* **The cost model** (``predict_step_cost``): per served sample, the sum
+  of (a) the serving program's exact HLO FLOPs/bytes (lowered once per
+  (Nx, n_classes, S, window, t_len, quantize) and memoized -
+  ``program_cost``), (b) the (A, B) accumulation work, (c) the
+  refresh-mode-dependent maintenance: incremental pays W rank-1 rotation
+  sweeps of s^2 per slot-step, recompute pays s^3/3 factorization
+  elements per slot per refresh round, (d) retirement extras (window
+  eviction doubles the rotation bill), and (e) dispatch overhead
+  amortized over ``step_block`` sub-steps.  The structure reproduces the
+  benched flips analytically: at W=1/Nx=16 the rotations are cheaper
+  than the s^3 round, at W=8/Nx=8 they are not.
+
+* **The search** (``Planner.search``): enumerate the feasible knob
+  lattice (refresh_mode x cohorts x step_block, minus combinations the
+  server rejects) and return the predicted-best ``Plan``.  The objective
+  is predicted served-samples/sec; cohort staggering only reshapes the
+  latency tail, so a pure-throughput search keeps cohorts=1 - ``Plan``
+  carries the predicted per-step refresh spike so callers with a p99
+  budget can stagger deliberately.
+
+``StreamServer(..., config='auto')`` wires this in: knobs the caller left
+unset are filled from ``Planner.search()``; explicit knobs always win.
+``replay_bench_tables`` is the honesty gate: it replays the tracked
+BENCH_*.json measurements and flags any shape where the planner's pick is
+>1.3x worse than the measured best (CI fails on it - the planner is only
+allowed to exist while it beats the tables it replaced).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import platform
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CAL_SCHEMA = 1
+CAL_ENV = "REPRO_PLANNER_CAL"
+DEFAULT_CAL_FILE = ".planner_calibration.json"
+
+#: the validation gate: the planner's pick must be within this factor of
+#: the measured best for every benched shape (ROADMAP contract; CI lane)
+GATE_RATIO = 1.3
+
+
+# ---------------------------------------------------------------------------
+# Calibration: per-primitive seconds-per-unit coefficients
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Calibration:
+    """Per-primitive cost coefficients for one (host, backend) pair.
+
+    Units are seconds per unit of work; the work units are exact counts
+    (HLO FLOPs/bytes from ``launch.hlo_cost`` or closed-form element
+    counts), so ``predict_step_cost`` composes them without re-measuring.
+    """
+
+    c_dispatch: float     # s per jitted program dispatch (host overhead)
+    c_flop: float         # s per dot FLOP (f32 GEMM-resident)
+    c_byte: float         # s per HBM byte of elementwise traffic
+    c_rot: float          # s per cholupdate rotation element (s^2 per row)
+    c_sub: float          # s per triangular-substitution element
+    c_chol: float         # s per Cholesky factorization element (~s^3/3)
+    c_quant: float        # s per quant/requant element (round+clip+cast)
+    backend: str = "cpu"
+    fingerprint: Dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict:
+        return {"schema": CAL_SCHEMA, **dataclasses.asdict(self)}
+
+    @classmethod
+    def from_json(cls, doc: Dict) -> "Calibration":
+        if doc.get("schema") != CAL_SCHEMA:
+            raise ValueError(f"calibration schema {doc.get('schema')!r} != "
+                             f"{CAL_SCHEMA}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in doc.items() if k in fields})
+
+
+def _host_fingerprint() -> Dict:
+    return {
+        "backend": jax.default_backend(),
+        "cores": os.cpu_count(),
+        "machine": platform.machine(),
+        "jax": jax.__version__,
+    }
+
+
+def _best_time(fn, *args, reps: int = 3, inner: int = 1) -> float:
+    """Best-of-``reps`` wall time of one (blocked) jitted call, warmed."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def _program_flops_bytes(fn, *args) -> Tuple[float, float]:
+    """Exact optimized-HLO FLOPs / HBM bytes of ``jit(fn)(*args)``."""
+    from repro.launch import hlo_cost
+
+    cost = hlo_cost.analyze(jax.jit(fn).lower(*args).compile().as_text())
+    return cost.flops, cost.mem_bytes
+
+
+def calibrate(reps: int = 3) -> Calibration:
+    """The one-time micro-calibration run (~a few seconds).
+
+    Each primitive is timed on a shape large enough to dominate dispatch,
+    then normalized by its own program's exact work count; the dispatch
+    constant itself comes from a near-empty program.  Coefficients are
+    clamped positive so a noisy subtraction can never go negative.
+    """
+    from repro.core import ridge
+
+    eps = 1e-15
+
+    # 1. dispatch: a near-empty program, many calls per timing block
+    x8 = jnp.zeros((8,), jnp.float32)
+    c_dispatch = _best_time(jax.jit(lambda x: x + 1.0), x8,
+                            reps=reps, inner=50)
+
+    def _coeff(t: float, units: float) -> float:
+        return max(t - c_dispatch, eps) / max(units, 1.0)
+
+    # 2. dot FLOPs: one GEMM, FLOPs from its own lowered HLO
+    a = jnp.ones((256, 512), jnp.float32)
+    b = jnp.ones((512, 256), jnp.float32)
+    mm = jax.jit(lambda a, b: a @ b)
+    flops, _ = _program_flops_bytes(lambda a, b: a @ b, a, b)
+    c_flop = _coeff(_best_time(mm, a, b, reps=reps), flops)
+
+    # 3. HBM bytes: elementwise pass over a buffer far beyond L2
+    big = jnp.ones((1 << 21,), jnp.float32)
+    ew = jax.jit(lambda x: x * 1.0000001 + 0.5)
+    _, mem = _program_flops_bytes(lambda x: x * 1.0000001 + 0.5, big)
+    c_byte = _coeff(_best_time(ew, big, reps=reps), mem)
+
+    # 4. cholupdate rotation: the server's own deferred-fold primitive,
+    #    vmapped over slots exactly as the fused step runs it
+    s0, S0, W0, Ny0 = 157, 8, 4, 4    # s(Nx=12); mid-size factor
+    U = jnp.broadcast_to(ridge.seed_factor(s0, 1e-2), (S0, s0, s0)).copy()
+    rows = jnp.ones((S0, W0, s0), jnp.float32) * 0.01
+    rot = jax.jit(jax.vmap(ridge.cholupdate_window_t))
+    c_rot = _coeff(_best_time(rot, U, rows, reps=reps), S0 * W0 * s0 * s0)
+
+    # 5/6. the two refresh primitives, timed AS THE SERVER RUNS THEM (the
+    # batched entry points, solves included) - a bare potrf underprices
+    # the recompute round ~6x on this backend (blocked-solve + regularize
+    # + layout traffic), enough to mispredict the W=1/Nx=16 winner
+    A0 = jnp.ones((S0, Ny0, s0), jnp.float32)
+    sub = jax.jit(ridge.ridge_solve_from_factor_t_batched)
+    c_sub = _coeff(_best_time(sub, A0, U, reps=reps), S0 * s0 * s0 * Ny0)
+
+    spd = jnp.eye(s0, dtype=jnp.float32) * 2.0
+    spd = jnp.broadcast_to(spd, (S0, s0, s0)).copy()
+    beta0 = jnp.float32(1e-2)
+    chol = jax.jit(lambda A, B: ridge.ridge_cholesky_batched(
+        A, ridge.regularize(B, beta0)))
+    c_chol = _coeff(_best_time(chol, A0, spd, reps=reps), S0 * s0 ** 3 / 3.0)
+
+    # 7. quant/requant: round+clip+cast to int8 and dequantize back
+    qx = jnp.ones((1 << 20,), jnp.float32)
+
+    def _qdq(x):
+        q = jnp.clip(jnp.round(x * 127.0), -127, 127).astype(jnp.int8)
+        return q.astype(jnp.float32) * (1.0 / 127.0)
+
+    c_quant = _coeff(_best_time(jax.jit(_qdq), qx, reps=reps), 1 << 20)
+
+    return Calibration(
+        c_dispatch=c_dispatch, c_flop=c_flop, c_byte=c_byte, c_rot=c_rot,
+        c_sub=c_sub, c_chol=c_chol, c_quant=c_quant,
+        backend=jax.default_backend(), fingerprint=_host_fingerprint(),
+    )
+
+
+def default_cal_path() -> str:
+    return os.environ.get(CAL_ENV, os.path.join(os.getcwd(),
+                                                DEFAULT_CAL_FILE))
+
+
+_CAL_CACHE: Dict[str, Calibration] = {}
+
+
+def get_calibration(path: Optional[str] = None,
+                    force: bool = False) -> Calibration:
+    """Load (or measure-and-persist) this host's calibration.
+
+    The JSON is reused only when its host/backend fingerprint matches -
+    a calibration measured on another machine (or backend) silently
+    re-measures instead of mis-pricing every primitive.  ``force``
+    re-measures unconditionally.  In-process results are cached, so a
+    fleet of ``config='auto'`` servers calibrates at most once.
+    """
+    path = path or default_cal_path()
+    if not force:
+        hit = _CAL_CACHE.get(path)
+        if hit is not None:
+            return hit
+        if os.path.exists(path):
+            try:
+                with open(path) as fh:
+                    cal = Calibration.from_json(json.load(fh))
+                if cal.fingerprint == _host_fingerprint():
+                    _CAL_CACHE[path] = cal
+                    return cal
+            except (ValueError, KeyError, TypeError, json.JSONDecodeError):
+                pass        # stale/foreign file: fall through to re-measure
+    cal = calibrate()
+    try:
+        with open(path, "w") as fh:
+            json.dump(cal.to_json(), fh, indent=2)
+            fh.write("\n")
+    except OSError:
+        pass                # read-only cwd: stay in-process-cached only
+    _CAL_CACHE[path] = cal
+    return cal
+
+
+# ---------------------------------------------------------------------------
+# Exact per-program serving cost (memoized - satellite fix for the bench's
+# per-row re-lower/re-compile of the same logits program)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def program_cost(n_nodes: int, n_classes: int, n_streams: int, window: int,
+                 t_len: int, quantize: str = "none") -> Tuple[float, float]:
+    """(FLOPs, HBM bytes) of one slot-batched serving-logits dispatch.
+
+    Lowers the fused streaming-logits program (S slots x W windows of T
+    reservoir steps + the readout contraction) once per distinct
+    ``(Nx, n_classes, S, window, t_len, quantize)`` and walks the
+    optimized HLO with ``launch.hlo_cost`` - exact loop-aware dot FLOPs
+    and memory traffic, memoized so bench sweeps and planner searches
+    never pay a redundant lower+compile.
+
+    The fp32 and int8 numbers are per-program absolute costs: the int8
+    program expresses the ring recurrence as per-step int8 dots while the
+    fp32 program keeps it elementwise, so the pair is comparable only
+    through a backend calibration (exactly what the planner applies) -
+    never as a raw FLOPs ratio.
+    """
+    from repro.kernels import ops
+    from repro.launch import hlo_cost
+
+    S, W, T, Nx = n_streams, window, t_len, n_nodes
+    nr = Nx * (Nx + 1)
+    j = jnp.zeros((S, W, T, Nx), jnp.float32)
+    lengths = jnp.full((S, W), T, jnp.int32)
+    p = jnp.full((S,), 0.5, jnp.float32)
+    q = jnp.full((S,), 0.4, jnp.float32)
+    b = jnp.zeros((S, n_classes), jnp.float32)
+    if quantize == "int8":
+        wq = jnp.zeros((S, n_classes, nr), jnp.int8)
+        sc = jnp.full((S,), 0.01, jnp.float32)
+        fn = jax.jit(functools.partial(
+            ops.streaming_logits_slots_q8, n_nodes=Nx))
+        lowered = fn.lower(j, lengths, p, q, wq, sc, sc, b)
+    else:
+        wf = jnp.zeros((S, n_classes, nr), jnp.float32)
+        fn = jax.jit(functools.partial(
+            ops.streaming_logits_slots, n_nodes=Nx))
+        lowered = fn.lower(j, lengths, p, q, wf, b)
+    cost = hlo_cost.analyze(lowered.compile().as_text())
+    return cost.flops, cost.mem_bytes
+
+
+# ---------------------------------------------------------------------------
+# The analytical per-step cost model
+# ---------------------------------------------------------------------------
+
+
+def predict_step_cost(
+    Nx: int,
+    S: int,
+    window: int,
+    retirement: str = "none",
+    refresh_mode: str = "recompute",
+    cohorts: int = 1,
+    step_block: int = 1,
+    quantize: str = "none",
+    backend: Optional[str] = None,
+    *,
+    n_classes: int = 4,
+    t_len: int = 24,
+    refresh_every: int = 5,
+    cal: Optional[Calibration] = None,
+) -> float:
+    """Predicted seconds per served sample for one knob setting.
+
+    The model prices what each sub-step actually executes (module
+    docstring): the serving program's exact HLO FLOPs/bytes, the (A, B)
+    accumulation, refresh-mode maintenance amortized over the refresh
+    cadence, retirement extras, the quantized path's second logits
+    program, and dispatch overhead amortized over the ``step_block``
+    scan.  ``backend`` only sanity-checks the calibration - coefficients
+    are measured per backend, never rescaled across one.
+    """
+    cal = cal or get_calibration()
+    if backend is not None and backend != cal.backend:
+        raise ValueError(
+            f"calibration measured on backend={cal.backend!r} cannot price "
+            f"backend={backend!r}; re-run get_calibration on that backend"
+        )
+    W, B, C = int(window), max(1, int(step_block)), max(1, int(cohorts))
+    s = Nx * Nx + Nx + 1
+    Ny = int(n_classes)
+
+    # (a) the serving-logits program, exact per-program work
+    flops, mem = program_cost(Nx, Ny, S, W, t_len, "none")
+    sub_step = flops * cal.c_flop + mem * cal.c_byte
+    if quantize == "int8":
+        # armed-lane int8 logits run IN ADDITION to the fp32 lane select
+        # (unarmed slots serve fp32), plus the per-step absmax tracking
+        qf, qm = program_cost(Nx, Ny, S, W, t_len, "int8")
+        sub_step += qf * cal.c_flop + qm * cal.c_byte
+        sub_step += S * W * t_len * Nx * cal.c_quant
+
+    # (b) statistics accumulation: A += oh r~^T, B += r~ r~^T per sample
+    sub_step += 2.0 * S * W * (s * s + Ny * s) * cal.c_flop
+    sub_step += S * s * s * 4.0 * cal.c_byte          # B read+write traffic
+
+    # (c) refresh-mode maintenance.  c_chol / c_sub are calibrated on the
+    # server's own batched refresh entry points (solves included), so each
+    # round is priced by ONE coefficient x its leading work count.
+    if refresh_mode == "incremental":
+        rot_sweeps = 1.0 + (1.0 if retirement == "window" else 0.0)
+        sub_step += rot_sweeps * S * W * s * s * cal.c_rot
+        refresh_work = S * s * s * Ny * cal.c_sub
+    else:
+        refresh_work = S * s ** 3 / 3.0 * cal.c_chol
+    # each slot refreshes once per refresh_every steps; C cohort branches
+    # per period each pay a small fixed gather/scatter-and-select cost
+    sub_step += (refresh_work + C * 0.5 * cal.c_dispatch) / refresh_every
+
+    if retirement == "window":
+        # ring eviction: the evicted row is subtracted from (A, B) too
+        sub_step += 2.0 * S * W * (s * s + Ny * s) * cal.c_flop
+
+    # (e) host cost: one dispatch per block + per-sub-step control residue
+    step_time = B * sub_step + cal.c_dispatch * (1.0 + 0.25 * (B - 1))
+    return step_time / (B * S * W)
+
+
+def predict_refresh_spike_s(
+    Nx: int, S: int, refresh_mode: str = "recompute", cohorts: int = 1,
+    *, n_classes: int = 4, cal: Optional[Calibration] = None,
+) -> float:
+    """Predicted extra wall time of a refresh-bearing step (the p99 spike
+    cohort staggering divides by ~C): the whole refresh round's work over
+    the ceil(S/C) slots due at once."""
+    cal = cal or get_calibration()
+    s = Nx * Nx + Nx + 1
+    due = -(-S // max(1, int(cohorts)))
+    if refresh_mode == "incremental":
+        return due * s * s * n_classes * cal.c_sub
+    return due * s ** 3 / 3.0 * cal.c_chol
+
+
+# ---------------------------------------------------------------------------
+# The planner: search the feasible knob lattice
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One point of the knob lattice plus its predicted cost."""
+
+    refresh_mode: str
+    refresh_cohorts: int
+    step_block: int
+    predicted_s_per_sample: float
+    predicted_samples_per_s: float
+    predicted_refresh_spike_s: float
+
+    def knobs(self) -> Dict[str, object]:
+        return {"refresh_mode": self.refresh_mode,
+                "refresh_cohorts": self.refresh_cohorts,
+                "step_block": self.step_block}
+
+
+DEFAULT_STEP_BLOCKS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+class Planner:
+    """Searches the serving-knob lattice with the calibrated cost model.
+
+    Shape/protocol inputs mirror ``StreamServer``'s; the semantic knobs
+    (``retirement``, ``quantize``) are respected as constraints, never
+    searched - retiring samples or quantizing logits changes what the
+    server computes, which is the caller's call, not a cost tradeoff.
+    """
+
+    def __init__(
+        self,
+        Nx: int,
+        S: int,
+        window: int,
+        t_len: int,
+        n_classes: int = 4,
+        refresh_every: int = 5,
+        retirement: str = "none",
+        quantize: str = "none",
+        staging: str = "device",
+        cal: Optional[Calibration] = None,
+    ):
+        self.Nx, self.S, self.window = int(Nx), int(S), int(window)
+        self.t_len, self.n_classes = int(t_len), int(n_classes)
+        self.refresh_every = max(1, int(refresh_every))
+        self.retirement = retirement
+        self.quantize = quantize
+        self.staging = staging
+        self.cal = cal or get_calibration()
+
+    def predict(self, refresh_mode: str, refresh_cohorts: int = 1,
+                step_block: int = 1) -> float:
+        return predict_step_cost(
+            self.Nx, self.S, self.window, self.retirement, refresh_mode,
+            refresh_cohorts, step_block, self.quantize,
+            n_classes=self.n_classes, t_len=self.t_len,
+            refresh_every=self.refresh_every, cal=self.cal,
+        )
+
+    def lattice(
+        self,
+        refresh_modes: Optional[Sequence[str]] = None,
+        cohorts: Optional[Sequence[int]] = None,
+        step_blocks: Optional[Sequence[int]] = None,
+    ) -> List[Tuple[str, int, int]]:
+        """The feasible (refresh_mode, cohorts, step_block) lattice under
+        the server's own validity rules."""
+        modes = tuple(refresh_modes or ("recompute", "incremental"))
+        if self.retirement == "window":
+            # the eviction downdates a live factor: incremental only
+            modes = tuple(m for m in modes if m == "incremental") or (
+                "incremental",)
+        cs = sorted({min(max(1, int(c)), self.refresh_every)
+                     for c in (cohorts or (1, self.refresh_every))})
+        blocks = tuple(step_blocks or DEFAULT_STEP_BLOCKS)
+        if self.staging != "device":
+            blocks = (1,)           # the blocked scan needs the staged pool
+        return [(m, c, b) for m in modes for c in cs for b in blocks]
+
+    def search(
+        self,
+        refresh_modes: Optional[Sequence[str]] = None,
+        cohorts: Optional[Sequence[int]] = None,
+        step_blocks: Optional[Sequence[int]] = None,
+    ) -> Plan:
+        """Predicted-best plan over the feasible lattice (throughput
+        objective; see the module docstring on cohorts/p99)."""
+        best: Optional[Plan] = None
+        for mode, c, b in self.lattice(refresh_modes, cohorts, step_blocks):
+            t = self.predict(mode, c, b)
+            plan = Plan(
+                refresh_mode=mode, refresh_cohorts=c, step_block=b,
+                predicted_s_per_sample=t,
+                predicted_samples_per_s=1.0 / max(t, 1e-30),
+                predicted_refresh_spike_s=predict_refresh_spike_s(
+                    self.Nx, self.S, mode, c, n_classes=self.n_classes,
+                    cal=self.cal,
+                ),
+            )
+            if best is None or t < best.predicted_s_per_sample:
+                best = plan
+        assert best is not None
+        return best
+
+
+# ---------------------------------------------------------------------------
+# The honesty gate: replay the tracked bench tables
+# ---------------------------------------------------------------------------
+
+#: bench policy name -> the knobs it measured (stream-quant table; all
+#: rows ran refresh_mode='incremental', retirement='none')
+_QUANT_POLICY_KNOBS: Dict[str, Dict] = {
+    "fp32": {"quantize": "none", "step_block": 1},
+    "int8": {"quantize": "int8", "step_block": 1},
+    "fp32_b4": {"quantize": "none", "step_block": 4},
+    "int8_b4": {"quantize": "int8", "step_block": 4},
+}
+
+
+def _parse_cell(cell: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for part in cell.split("/"):
+        key = part.rstrip("0123456789")
+        if key and part[len(key):]:
+            out[key] = int(part[len(key):])
+    return out
+
+
+def replay_bench_tables(
+    root: Optional[str] = None,
+    cal: Optional[Calibration] = None,
+    gate: float = GATE_RATIO,
+) -> List[Dict]:
+    """Validate the planner against the tracked BENCH_*.json measurements.
+
+    For every benched shape whose policies map onto planner knobs
+    (currently the ``stream-quant`` table: fp32/int8 x block 1/4), ask
+    the cost model to rank exactly the measured configs; the row fails
+    (``ok=False``) when the predicted-best config's MEASURED samples/sec
+    is more than ``gate`` (1.3x) below the measured best.  Rows, not
+    exceptions: callers (tests, the CI lane) assert on ``ok`` so a
+    failure names every offending shape at once.
+    """
+    root = root or os.getcwd()
+    cal = cal or get_calibration()
+    results: List[Dict] = []
+    path = os.path.join(root, "BENCH_stream_quant.json")
+    if not os.path.exists(path):
+        return results
+    with open(path) as fh:
+        doc = json.load(fh)
+    for row in doc.get("rows", ()):
+        if row.get("table") != "stream-quant":
+            continue
+        dims = _parse_cell(row.get("cell", ""))
+        Nx, S, W = dims.get("Nx"), dims.get("S"), dims.get("W", 1)
+        if not Nx or not S:
+            continue
+        t_len = int(row.get("t_len", 24))      # the quant suite's fixture
+        measured = {
+            name: row[f"{name}_samples_per_s"]
+            for name in _QUANT_POLICY_KNOBS
+            if f"{name}_samples_per_s" in row
+        }
+        if len(measured) < 2:
+            continue
+        predicted = {
+            name: predict_step_cost(
+                Nx, S, W, "none", "incremental", 1,
+                knobs["step_block"], knobs["quantize"],
+                n_classes=4, t_len=t_len, refresh_every=5, cal=cal,
+            )
+            for name, knobs in _QUANT_POLICY_KNOBS.items()
+            if name in measured
+        }
+        pick = min(predicted, key=predicted.get)
+        best = max(measured, key=measured.get)
+        ratio = measured[best] / max(measured[pick], 1e-12)
+        results.append({
+            "source": os.path.basename(path),
+            "cell": row["cell"],
+            "pick": pick,
+            "best": best,
+            "pick_measured_samples_per_s": measured[pick],
+            "best_measured_samples_per_s": measured[best],
+            "best_over_pick_ratio": round(ratio, 3),
+            "ok": ratio <= gate,
+        })
+    return results

@@ -1011,6 +1011,19 @@ class StreamServer:
         episode exactly (same admissions, same refresh schedule, same
         predictions).  Requires ``staging='device'``.  T=1 routes through
         the unchanged PR-6 step functions.
+
+    Auto-configuration (PR 8):
+
+      * ``config='auto'`` - fill the pure-performance knobs the caller
+        left unset (``refresh_mode``, ``refresh_cohorts``, ``step_block``)
+        from ``runtime.planner``'s calibrated cost model instead of the
+        static defaults; the chosen ``Plan`` is exposed as ``self.plan``.
+        Explicitly passed knobs always override the planner, and without
+        ``config='auto'`` unset knobs resolve to the historical defaults
+        (recompute / 1 / 1) - existing call sites are bitwise unchanged.
+        The first auto server on a host pays a few seconds of
+        micro-calibration, persisted to ``.planner_calibration.json``
+        (override via ``REPRO_PLANNER_CAL``) so later servers skip it.
     """
 
     def __init__(
@@ -1025,8 +1038,8 @@ class StreamServer:
         beta: float = 1e-2,
         mask: Optional[Array] = None,
         fused_infer: Optional[bool] = None,
-        refresh_mode: str = "recompute",
-        refresh_cohorts: int = 1,
+        refresh_mode: Optional[str] = None,
+        refresh_cohorts: Optional[int] = None,
         retirement: str = "none",
         forget: float = 1.0,
         retire_window: int = 0,
@@ -1037,8 +1050,41 @@ class StreamServer:
         latency_window: int = 4096,
         devices: int = 1,
         quantize: str = "none",
-        step_block: int = 1,
+        step_block: Optional[int] = None,
+        config: Optional[str] = None,
     ):
+        # -- config='auto': fill UNSET performance knobs from the calibrated
+        # cost-model planner (runtime.planner).  Explicit knobs always win,
+        # so any PR-7 call site resolves to bitwise-identical behavior; only
+        # the pure-performance knobs (refresh_mode / refresh_cohorts /
+        # step_block) are planned - semantic knobs (retirement, quantize,
+        # staging, devices) are constraints the planner respects, never
+        # choices it makes.
+        if config not in (None, "auto"):
+            raise ValueError(f"unknown config: {config!r} (None or 'auto')")
+        self.plan = None
+        if config == "auto":
+            from repro.runtime import planner as _planner
+
+            _pl = _planner.Planner(
+                cfg.n_nodes, max_streams, window, t_max,
+                n_classes=cfg.n_classes, refresh_every=refresh_every,
+                retirement=retirement, quantize=quantize, staging=staging,
+            )
+            self.plan = _pl.search()
+            if refresh_mode is None:
+                refresh_mode = self.plan.refresh_mode
+            if refresh_cohorts is None:
+                refresh_cohorts = self.plan.refresh_cohorts
+            if step_block is None:
+                step_block = self.plan.step_block
+        # unset knobs without config='auto' keep the historical defaults
+        if refresh_mode is None:
+            refresh_mode = "recompute"
+        if refresh_cohorts is None:
+            refresh_cohorts = 1
+        if step_block is None:
+            step_block = 1
         if refresh_mode not in ("recompute", "incremental"):
             raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
         if retirement not in ("none", "forget", "window"):
@@ -1581,6 +1627,11 @@ class StreamServer:
         a deep pipeline cannot hide it.  All records ride bounded ring
         buffers (``latency_window`` entries), so long-lived servers don't
         grow without bound.
+
+        A ring with no records reports ``NaN`` for its percentiles - a
+        server that never stepped (or a depth-0 pipeline that never
+        drained) is "no measurement", which must stay distinguishable from
+        a genuine sub-resolution 0.0 ms reading.
         """
         out: Dict[str, float] = {}
         for prefix, rec in (("", self.step_times_s),
@@ -1591,7 +1642,7 @@ class StreamServer:
                 p50, p99 = (float(np.percentile(t, 50)),
                             float(np.percentile(t, 99)))
             else:
-                p50 = p99 = 0.0
+                p50 = p99 = float("nan")
             out[f"{prefix}p50_ms"] = p50
             out[f"{prefix}p99_ms"] = p99
         return out

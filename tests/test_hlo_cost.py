@@ -80,3 +80,42 @@ def test_memory_bytes_scale_with_shapes():
     c_big = hlo_cost.analyze(_compile(f, big).as_text())
     c_small = hlo_cost.analyze(_compile(f, small).as_text())
     assert c_big.mem_bytes > 100 * c_small.mem_bytes
+
+
+# -- dtype byte accounting (the _shape_bytes 4-byte-default bugfix) ----------
+
+
+def test_shape_bytes_narrow_dtypes_exact():
+    """int8/pred buffers must be priced at 1 byte/elem, f32 at 4 - the old
+    silent 4-byte default overpriced every narrow buffer 4x (the quant
+    path's planner calibration reads these numbers)."""
+    assert hlo_cost._shape_bytes("s8", "16,32") == 16 * 32
+    assert hlo_cost._shape_bytes("u8", "8") == 8
+    assert hlo_cost._shape_bytes("pred", "64") == 64
+    assert hlo_cost._shape_bytes("f32", "16,32") == 4 * 16 * 32
+    assert hlo_cost._shape_bytes("bf16", "10,10") == 2 * 100
+    assert hlo_cost._shape_bytes("f64", "3") == 24
+    assert hlo_cost._shape_bytes("s32", "") == 4        # scalar
+    assert hlo_cost._shape_bytes("token", "") == 0      # no HBM footprint
+    assert hlo_cost._shape_bytes("f32", "0,7") == 0     # empty tensor
+
+
+def test_shape_bytes_unknown_dtype_raises():
+    with pytest.raises(ValueError, match="unrecognized HLO element type"):
+        hlo_cost._shape_bytes("f640", "4,4")
+    with pytest.raises(ValueError, match="nosuch"):
+        hlo_cost._shape_bytes("nosuch", "")
+
+
+def test_int8_vs_f32_program_bytes():
+    """End-to-end through analyze(): the same elementwise program on int8
+    operands must cost ~4x fewer HBM bytes than on f32 ones."""
+    n = 4096
+    i8 = jax.ShapeDtypeStruct((n,), jnp.int8)
+    f32 = jax.ShapeDtypeStruct((n,), jnp.float32)
+    c8 = hlo_cost.analyze(_compile(lambda x: x + x, i8).as_text())
+    c32 = hlo_cost.analyze(_compile(lambda x: x + x, f32).as_text())
+    assert c8.mem_bytes > 0
+    # read + write of (n,) at 1 vs 4 bytes/elem; allow fusion-shape slack
+    assert c32.mem_bytes == pytest.approx(4.0 * c8.mem_bytes, rel=0.25)
+    assert c8.mem_bytes <= 3 * n          # never the old 4-byte default

@@ -1,0 +1,307 @@
+"""The calibrated cost-model planner (PR 8): model structure, persistence,
+the feasibility lattice, ``StreamServer(config='auto')`` wiring, and the
+bench-replay validation gate.
+
+Most tests run on a SYNTHETIC ``Calibration`` - the model's structural
+claims (step blocking amortizes dispatch, rotation-heavy backends favor
+recompute at large windows, window retirement doubles the rotation bill)
+must hold for any positive coefficients, so no test here pays the real
+micro-calibration run.  The true-coefficient end-to-end check lives in the
+planner bench lane (``bench_stream.py --planner --smoke``), which measures
+this host and fails on the 1.3x gate.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core.types import DFRConfig
+from repro.runtime import StreamRequest, StreamServer, planner
+from repro.runtime.planner import (
+    Calibration,
+    Plan,
+    Planner,
+    predict_step_cost,
+    replay_bench_tables,
+)
+
+
+#: flat synthetic coefficients: every primitive 1ns/unit, dispatch 1us
+def _cal(**over) -> Calibration:
+    kw = dict(c_dispatch=1e-6, c_flop=1e-9, c_byte=1e-9, c_rot=1e-9,
+              c_sub=1e-9, c_chol=1e-9, c_quant=1e-9, backend="cpu",
+              fingerprint={"backend": "cpu"})
+    kw.update(over)
+    return Calibration(**kw)
+
+
+# tiny shape so program_cost's one-time lower+compile stays cheap (and is
+# shared by every test through the lru_cache)
+NX, S, W, T = 4, 2, 1, 8
+
+
+def _predict(cal, **over):
+    kw = dict(Nx=NX, S=S, window=W, retirement="none",
+              refresh_mode="recompute", cohorts=1, step_block=1,
+              quantize="none", n_classes=3, t_len=T, refresh_every=5,
+              cal=cal)
+    kw.update(over)
+    return predict_step_cost(**kw)
+
+
+# -- the model's structural claims -------------------------------------------
+
+
+def test_step_block_amortizes_dispatch():
+    cal = _cal(c_dispatch=1e-3)         # dispatch-dominated backend
+    t1 = _predict(cal, step_block=1)
+    t4 = _predict(cal, step_block=4)
+    t8 = _predict(cal, step_block=8)
+    assert t8 < t4 < t1
+    # with free dispatch, blocking cannot help (and must not hurt)
+    free = _cal(c_dispatch=0.0)
+    assert _predict(free, step_block=8) == pytest.approx(
+        _predict(free, step_block=1))
+
+
+def test_refresh_mode_winner_flips_with_rotation_cost():
+    """The PR-3 table's structure: cheap rotations -> incremental wins;
+    expensive rotations (large windows multiply them) -> recompute wins."""
+    rot_cheap = _cal(c_rot=1e-12, c_chol=1e-8)
+    assert _predict(rot_cheap, refresh_mode="incremental") < _predict(
+        rot_cheap, refresh_mode="recompute")
+    rot_dear = _cal(c_rot=1e-6, c_chol=1e-12)
+    assert _predict(rot_dear, refresh_mode="recompute", window=8) < _predict(
+        rot_dear, refresh_mode="incremental", window=8)
+
+
+def test_window_retirement_doubles_rotations():
+    cal = _cal(c_rot=1e-6)
+    inc = _predict(cal, refresh_mode="incremental")
+    win = _predict(cal, refresh_mode="incremental", retirement="window")
+    assert win > inc
+
+
+def test_quantize_costs_extra_on_calibrated_cpu():
+    cal = _cal()
+    assert _predict(cal, quantize="int8") > _predict(cal, quantize="none")
+
+
+def test_backend_mismatch_raises():
+    with pytest.raises(ValueError, match="backend"):
+        _predict(_cal(backend="cpu"), backend="tpu")
+
+
+def test_more_cohorts_shrink_predicted_refresh_spike():
+    cal = _cal()
+    spikes = [planner.predict_refresh_spike_s(8, 16, "recompute", c,
+                                              n_classes=3, cal=cal)
+              for c in (1, 2, 4)]
+    assert spikes[0] > spikes[1] > spikes[2]
+
+
+# -- the feasibility lattice and the search ----------------------------------
+
+
+def _mk_planner(cal, **over):
+    kw = dict(Nx=NX, S=S, window=W, t_len=T, n_classes=3, refresh_every=5,
+              cal=cal)
+    kw.update(over)
+    return Planner(**kw)
+
+
+def test_lattice_respects_window_retirement():
+    pl = _mk_planner(_cal(), retirement="window")
+    assert {m for m, _, _ in pl.lattice()} == {"incremental"}
+
+
+def test_lattice_restricts_host_staging_to_unblocked():
+    pl = _mk_planner(_cal(), staging="host")
+    assert {b for _, _, b in pl.lattice()} == {1}
+
+
+def test_search_returns_lattice_argmin():
+    pl = _mk_planner(_cal(c_dispatch=1e-3))
+    plan = pl.search()
+    assert isinstance(plan, Plan)
+    best = min(pl.predict(m, c, b) for m, c, b in pl.lattice())
+    assert plan.predicted_s_per_sample == pytest.approx(best)
+    assert plan.predicted_samples_per_s == pytest.approx(
+        1.0 / plan.predicted_s_per_sample)
+    assert plan.knobs().keys() == {"refresh_mode", "refresh_cohorts",
+                                   "step_block"}
+
+
+# -- calibration persistence -------------------------------------------------
+
+
+def test_calibration_json_roundtrip():
+    cal = _cal(c_flop=3.25e-10)
+    doc = json.loads(json.dumps(cal.to_json()))
+    back = Calibration.from_json(doc)
+    assert back == cal
+
+
+def test_calibration_schema_mismatch_raises():
+    doc = _cal().to_json()
+    doc["schema"] = 999
+    with pytest.raises(ValueError, match="schema"):
+        Calibration.from_json(doc)
+
+
+def test_get_calibration_reuses_matching_file(tmp_path, monkeypatch):
+    """A persisted calibration with this host's fingerprint must be loaded
+    verbatim - never re-measured."""
+    path = tmp_path / "cal.json"
+    cal = _cal(c_flop=1.25e-4,
+               fingerprint=planner._host_fingerprint(),
+               backend=planner._host_fingerprint()["backend"])
+    path.write_text(json.dumps(cal.to_json()))
+    monkeypatch.setattr(planner, "calibrate",
+                        lambda *a, **k: pytest.fail("re-measured"))
+    got = planner.get_calibration(str(path))
+    assert got.c_flop == 1.25e-4
+    # and the in-process cache serves repeats even if the file vanishes
+    path.unlink()
+    assert planner.get_calibration(str(path)).c_flop == 1.25e-4
+
+
+def test_get_calibration_rejects_foreign_fingerprint(tmp_path, monkeypatch):
+    path = tmp_path / "cal.json"
+    foreign = _cal(fingerprint={"backend": "not-this-host", "cores": -1})
+    path.write_text(json.dumps(foreign.to_json()))
+    fresh = _cal(c_flop=7.5e-7, fingerprint=planner._host_fingerprint())
+    monkeypatch.setattr(planner, "calibrate", lambda *a, **k: fresh)
+    got = planner.get_calibration(str(path))
+    assert got.c_flop == 7.5e-7
+    # the re-measured result replaced the foreign file
+    assert json.loads(path.read_text())["c_flop"] == 7.5e-7
+
+
+# -- StreamServer(config='auto') wiring --------------------------------------
+
+
+CFG = DFRConfig(n_in=2, n_classes=3, n_nodes=4)
+
+
+def _stream(rid=0, n=6, t=T, seed=0):
+    import numpy as np
+
+    r = np.random.default_rng(seed)
+    return StreamRequest(
+        rid=rid,
+        u=r.normal(size=(n, t, 2)).astype(np.float32),
+        length=r.integers(4, t + 1, n).astype(np.int32),
+        label=r.integers(0, 3, n).astype(np.int32),
+    )
+
+
+@pytest.fixture()
+def synthetic_host_cal(monkeypatch):
+    cal = _cal(c_dispatch=1e-3)
+    monkeypatch.setattr(planner, "get_calibration", lambda *a, **k: cal)
+    return cal
+
+
+def test_config_auto_fills_unset_knobs(synthetic_host_cal):
+    srv = StreamServer(CFG, t_max=T, max_streams=S, window=W, config="auto")
+    assert srv.plan is not None
+    assert srv.refresh_mode == srv.plan.refresh_mode
+    assert srv.step_block == srv.plan.step_block
+    assert srv.cohorts.n_cohorts >= 1
+    srv.submit(_stream())
+    done = srv.run_until_drained()
+    assert len(done) == 1 and done[0].done
+
+
+def test_config_auto_explicit_knobs_override(synthetic_host_cal):
+    # the dispatch-heavy synthetic cal makes the planner prefer blocking,
+    # so explicit step_block=1 proves the override wins
+    auto = StreamServer(CFG, t_max=T, max_streams=S, window=W,
+                        config="auto")
+    assert auto.plan.step_block > 1
+    srv = StreamServer(CFG, t_max=T, max_streams=S, window=W, config="auto",
+                       refresh_mode="recompute", refresh_cohorts=1,
+                       step_block=1)
+    assert (srv.refresh_mode, srv.cohorts.n_cohorts, srv.step_block) == (
+        "recompute", 1, 1)
+
+
+def test_config_auto_respects_window_retirement(synthetic_host_cal):
+    srv = StreamServer(CFG, t_max=T, max_streams=S, window=W, config="auto",
+                       retirement="window", retire_window=8)
+    assert srv.refresh_mode == "incremental"
+
+
+def test_default_config_keeps_historical_defaults():
+    srv = StreamServer(CFG, t_max=T, max_streams=S, window=W)
+    assert srv.plan is None
+    assert (srv.refresh_mode, srv.cohorts.n_cohorts, srv.step_block) == (
+        "recompute", 1, 1)
+
+
+def test_unknown_config_raises():
+    with pytest.raises(ValueError, match="config"):
+        StreamServer(CFG, t_max=T, max_streams=S, window=W, config="fast")
+
+
+# -- the bench-replay validation gate ----------------------------------------
+
+
+def _bench_doc(rows):
+    return {"bench": "stream_quant", "rows": rows}
+
+
+def _quant_row(cell="S2/Nx4/W1", **sps):
+    row = {"table": "stream-quant", "cell": cell, "t_len": T}
+    for name, v in sps.items():
+        row[f"{name}_samples_per_s"] = v
+    return row
+
+
+def test_replay_passes_when_model_ranks_like_the_bench(tmp_path):
+    # flat coefficients predict fp32_b4 fastest (blocking amortizes
+    # dispatch, int8 adds work) - the bench agrees, so the gate passes
+    (tmp_path / "BENCH_stream_quant.json").write_text(json.dumps(_bench_doc(
+        [_quant_row(fp32=1000.0, int8=300.0, fp32_b4=1400.0, int8_b4=350.0)]
+    )))
+    res = replay_bench_tables(str(tmp_path), cal=_cal(c_dispatch=1e-3))
+    assert len(res) == 1
+    assert res[0]["ok"] is True
+    assert res[0]["pick"] == "fp32_b4" == res[0]["best"]
+    assert res[0]["best_over_pick_ratio"] == pytest.approx(1.0)
+
+
+def test_replay_fails_when_pick_misses_the_gate(tmp_path):
+    # the bench says blocking is a disaster (>1.3x) on this 'host'; the
+    # flat model still picks it, so the row must flag ok=False
+    (tmp_path / "BENCH_stream_quant.json").write_text(json.dumps(_bench_doc(
+        [_quant_row(fp32=1000.0, int8=300.0, fp32_b4=500.0, int8_b4=200.0)]
+    )))
+    res = replay_bench_tables(str(tmp_path), cal=_cal(c_dispatch=1e-3))
+    assert res[0]["ok"] is False
+    assert res[0]["pick"] == "fp32_b4"
+    assert res[0]["best"] == "fp32"
+    assert res[0]["best_over_pick_ratio"] == pytest.approx(2.0)
+
+
+def test_replay_no_table_is_empty(tmp_path):
+    assert replay_bench_tables(str(tmp_path), cal=_cal()) == []
+
+
+def test_replay_parses_real_tracked_table_if_present():
+    """The repo's own tracked table must replay without errors (the gate
+    itself is enforced by the bench lane with the REAL calibration; here
+    any calibration proves row parsing, policy mapping, and ratio math)."""
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if not os.path.exists(os.path.join(root, "BENCH_stream_quant.json")):
+        pytest.skip("no tracked quant table")
+    res = replay_bench_tables(root, cal=_cal(c_dispatch=1e-3))
+    assert res, "tracked table produced no replay rows"
+    for row in res:
+        assert set(row) >= {"cell", "pick", "best", "best_over_pick_ratio",
+                            "ok"}
+        assert row["best_over_pick_ratio"] >= 1.0
+        assert not math.isnan(row["best_over_pick_ratio"])
