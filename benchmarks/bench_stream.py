@@ -380,6 +380,8 @@ DRIFT_POLICIES: Tuple[Tuple[str, Dict], ...] = (
     ("baseline", {}),                                      # growing memory
     ("forget", {"retirement": "forget"}),                  # lambda filled in
     ("window", {"retirement": "window"}),                  # capacity filled in
+    ("adaptive", {"retirement": "adaptive"}),              # untold detector:
+    # server defaults only - no lambda, capacity or switch point provided
 )
 
 
@@ -458,6 +460,61 @@ def _bench_drift_case(
             # retirement overhead: < 1.0 means the policy costs throughput
             row[f"{name}_throughput_ratio"] = round(base_time / best_t, 2)
     return row
+
+
+# the adaptive detector under each serving mode it must compose with (the
+# 8-device sharded variant lives in the forced-device CI parity test -
+# the sharded episode is bitwise the unsharded one, so its accuracy IS
+# the plain column)
+ADAPTIVE_MODES: Tuple[Tuple[str, Dict], ...] = (
+    ("plain", {}),
+    ("blocked", {"step_block": 4}),
+    ("int8", {"quantize": "int8"}),
+)
+
+
+def _bench_adaptive_modes_case(
+    n_streams: int, n_samples: int, t_len: int, n_nodes: int, window: int,
+    n_classes: int = 4,
+) -> Dict:
+    """retirement='adaptive' (server defaults, told nothing about the
+    drift) under each serving mode: the tracked record behind the
+    acceptance gate that the untold detector recovers into the hand-picked
+    forget/window post-drift band everywhere it composes."""
+    cfg = DFRConfig(n_in=1, n_classes=n_classes, n_nodes=n_nodes)
+    row: Dict = {
+        "table": "drift-adaptive-modes",
+        "cell": f"S{n_streams}/N{n_samples}/Nx{n_nodes}/W{window}",
+    }
+    for mode, kw in ADAPTIVE_MODES:
+        streams, switches = _make_drift_streams(
+            n_streams, n_samples, t_len, n_classes
+        )
+        _serve_batched(
+            cfg, streams, t_len, window, phase_steps=3, refresh_every=2,
+            refresh_mode="incremental", retirement="adaptive", **kw,
+        )
+        pre, at, post = drift_segment_bounds(n_samples, switches[0], window)
+        for seg_name, (lo, hi) in (("pre", pre), ("at", at), ("post", post)):
+            row[f"{mode}_{seg_name}_acc"] = round(float(np.mean(
+                [_segment_accuracy(r, lo, hi) for r in streams])), 3)
+    return row
+
+
+def run_drift(full: bool = False, smoke: bool = False) -> List[Dict]:
+    """The drift table (now with untuned ``adaptive`` columns next to the
+    hand-picked forget/window policies) plus the adaptive-modes record -
+    the tracked BENCH_stream_drift.json suite."""
+    if smoke:
+        drift_cases = [(2, 64, 16, 8, 4)]
+    elif full:
+        drift_cases = [(4, 160, 16, 8, 4), (4, 160, 16, 16, 4),
+                       (8, 160, 16, 16, 1)]
+    else:
+        drift_cases = [(4, 160, 16, 8, 4), (4, 160, 16, 16, 4)]
+    rows = [_bench_drift_case(*c) for c in drift_cases]
+    rows += [_bench_adaptive_modes_case(*c) for c in drift_cases]
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -945,6 +1002,9 @@ def main() -> None:
     ap.add_argument("--planner", action="store_true",
                     help="the planner-validation table only; exits nonzero "
                          "when the auto pick misses the 1.3x gate")
+    ap.add_argument("--drift", action="store_true",
+                    help="the drift-recovery table (retirement policies "
+                         "incl. untuned adaptive) + adaptive-modes record")
     ap.add_argument("--json", action="store_true",
                     help="emit rows as JSON lines (machine readable)")
     args = ap.parse_args()
@@ -954,6 +1014,8 @@ def main() -> None:
         rows = run_quant(full=args.full, smoke=args.smoke)
     elif args.planner:
         rows = run_planner(full=args.full, smoke=args.smoke)
+    elif args.drift:
+        rows = run_drift(full=args.full, smoke=args.smoke)
     else:
         rows = run(full=args.full, smoke=args.smoke)
     for row in rows:

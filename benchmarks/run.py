@@ -28,7 +28,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: ridge,backprop,truncation,system,"
                          "population,stream,stream_quant,stream_planner,"
-                         "roofline")
+                         "stream_drift,roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_backprop, bench_population, bench_ridge,
@@ -45,6 +45,7 @@ def main() -> None:
         "stream_sharded": lambda: bench_stream.run_sharded(args.full),
         "stream_quant": lambda: bench_stream.run_quant(args.full),
         "stream_planner": lambda: bench_stream.run_planner(args.full),
+        "stream_drift": lambda: bench_stream.run_drift(args.full),
         "roofline": lambda: roofline.summary_csv(),
     }
     # opt-in only: the sharded sweep re-execs under 8 forced XLA devices,
@@ -93,6 +94,20 @@ _BENCH_JSON = {
         "a cross-path ratio; quant-drift rows track the int8 accuracy "
         "band (training stays fp32, so deltas are pure serving-path "
         "rounding)",
+    ),
+    "stream_drift": (
+        "BENCH_stream_drift.json",
+        "drift-recovery accuracy by retirement policy (pre/at/post switch)",
+        "accuracy columns are host-independent (deterministic episodes); "
+        "samples/sec columns are wall-clock on this host. forget/window "
+        "columns use HAND-PICKED lambda / capacity (the forget_lambda / "
+        "window_capacity fields); adaptive columns run the in-step "
+        "detector on server defaults - it is never told the forget "
+        "factor, the window, or that (let alone where) a drift exists. "
+        "drift-adaptive-modes rows re-serve the adaptive policy under "
+        "step blocking and int8 serving; the 8-device sharded episode is "
+        "bitwise the plain one (CI parity tests), so its accuracy is the "
+        "plain column",
     ),
     "stream_planner": (
         "BENCH_stream_planner.json",

@@ -30,6 +30,13 @@ online accuracy before / at / after each stream's drift point - the
 regime where the sample-retirement policies (``--forget`` lambda, or
 ``--retire-window`` capacity with the guarded hyperbolic downdate) keep
 tracking while the grow-only default stays anchored to the dead regime.
+``--retirement adaptive`` (PR 9) needs neither knob: a per-slot loss-EMA
+breakpoint detector anneals that slot's statistics only when its own
+error rate breaks out, so it recovers like the hand-tuned policies
+without being told lambda, the capacity, or that a drift exists.
+``--autotune`` attaches the warm-pool background autotuner: a per-cohort
+(p, q, beta) population re-evaluated on recent retained windows, with
+winners hot-swapped into live slots at refresh boundaries.
 
 Sharded serving (``--devices N``): shard the server's slot axis over N
 devices (PR 6; ``--max-streams`` is rounded up to a multiple of N).  On a
@@ -95,8 +102,16 @@ def _server_retirement_kw(args) -> dict:
     ``--config auto`` can plan it; the retirement policies still pin
     ``incremental`` explicitly (a semantic requirement, not a tuning
     choice - window retirement downdates a live factor)."""
-    if args.forget is not None and args.retire_window is not None:
-        raise SystemExit("pick one of --forget / --retire-window")
+    picked = [f for f, v in (("--forget", args.forget),
+                             ("--retire-window", args.retire_window),
+                             ("--retirement", args.retirement)) if v is not None]
+    if len(picked) > 1:
+        raise SystemExit(f"pick one of {' / '.join(picked)}")
+    if args.retirement == "adaptive":
+        # the self-adjusting policy: no lambda / capacity to supply - the
+        # per-slot detector runs on the server's default thresholds
+        return {"retirement": "adaptive",
+                "refresh_mode": args.refresh_mode or "incremental"}
     if args.forget is not None:
         return {"retirement": "forget", "forget": args.forget,
                 "refresh_mode": args.refresh_mode or "incremental"}
@@ -120,6 +135,24 @@ def _server_pipeline_kw(args) -> dict:
         "step_block": args.step_block,
         "config": args.config,
     }
+
+
+def _attach_autotuner(server, args):
+    """--autotune: hang the warm-pool (p, q, beta) autotuner off the server."""
+    if not args.autotune:
+        return None
+    from repro.runtime import WarmPoolAutotuner
+    tuner = WarmPoolAutotuner(server)
+    server.attach_autotuner(tuner)
+    return tuner
+
+
+def _print_tuner(tuner) -> None:
+    if tuner is not None:
+        st = tuner.stats()
+        print(f"  autotuner: {st['rounds_run']} tune round(s), "
+              f"{st['swaps_applied']} hot-swap(s) applied "
+              f"({st['swaps_pending']} still pending at drain)")
 
 
 def _fmt_ms(v) -> str:
@@ -182,9 +215,11 @@ def run_drift(args) -> None:
           f"(switch at sample {switches[0]}; retirement={policy})")
     _print_mesh(server)
     _print_plan(server)
+    tuner = _attach_autotuner(server, args)
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()
+    _print_tuner(tuner)
 
     for r in sorted(done, key=lambda r: r.rid):
         bounds = drift_segment_bounds(n, switches[r.rid], args.window)
@@ -237,6 +272,21 @@ def main():
                          "hyperbolic downdates (implies --refresh-mode "
                          "incremental; W >= stream length is exactly the "
                          "non-retiring path)")
+    ap.add_argument("--retirement", choices=("adaptive",), default=None,
+                    help="'adaptive' (PR 9): per-slot loss-EMA breakpoint "
+                         "detector anneals a slot's (A, B, Lt) only when "
+                         "that slot's own error rate breaks out - drift "
+                         "recovery without hand-picking --forget or "
+                         "--retire-window (implies --refresh-mode "
+                         "incremental; bitwise the non-retiring path while "
+                         "the detector stays silent)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="attach the warm-pool background autotuner (PR 9): "
+                         "a per-cohort (p, q, beta) population re-evaluated "
+                         "on each slot's recent retained windows, winners "
+                         "hot-swapped into live slots just after their "
+                         "cohort's refresh boundary (factor invariant "
+                         "re-seeded, quant scales re-arm)")
     ap.add_argument("--pipeline-depth", type=int, default=0, metavar="D",
                     help="async serving pipeline depth: predictions ride a "
                          "lag-D device ring while the host books step k "
@@ -322,9 +372,11 @@ def main():
           f"train-while-serve")
     _print_mesh(server)
     _print_plan(server)
+    tuner = _attach_autotuner(server, args)
     for s in streams:
         server.submit(s)
     done = server.run_until_drained()
+    _print_tuner(tuner)
 
     for r in sorted(done, key=lambda r: r.rid):
         print(f"  stream {r.rid}: {r.n_samples} samples, rolling online acc "

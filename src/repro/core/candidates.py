@@ -16,7 +16,9 @@ re-seeded exactly like offline candidates:
                                              K=1 ensemble equals the single
                                              system bit-for-bit)
   * ``survivor_parents``                   - rank-order parent assignment
-  * ``jitter_clones``                      - multiplicative log-normal
+  * ``sampling_cov_chol`` / ``adapted_clones`` - CMA-ES-style survivor
+                                             covariance sampling in log space
+  * ``jitter_clones``                      - covariance-adapted log-normal
                                              jitter on culled slots
   * ``cull_population``                    - the offline composition of the
                                              two (moved here verbatim from
@@ -25,7 +27,7 @@ re-seeded exactly like offline candidates:
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +99,12 @@ def seed_candidates(
     q = jnp.asarray(q_init, dtype) * jnp.exp(scale * eps[1])
     p = jnp.clip(p, 10.0 ** p_range[0], 10.0 ** p_range[1])
     q = jnp.clip(q, 10.0 ** q_range[0], 10.0 ** q_range[1])
+    # member 0 is the documented *exact* anchor (the K=1 == single-system
+    # parity contract) - an out-of-box p_init/q_init must not be silently
+    # moved by the clip, so restore it after clipping members 1..K-1
+    anchor = jnp.arange(k) == 0
+    p = jnp.where(anchor, jnp.asarray(p_init, dtype), p)
+    q = jnp.where(anchor, jnp.asarray(q_init, dtype), q)
     return p, q
 
 
@@ -126,6 +134,64 @@ def survivor_parents(
     return parent, keep, n_keep
 
 
+def sampling_cov_chol(coords_log: Array, keep: Array, jitter: float) -> Array:
+    """CMA-ES-style sampling covariance (lower Cholesky) from the survivors.
+
+    ``coords_log`` is (D, K) log-space coordinates; ``keep`` (K,) marks the
+    survivors, which occupy the *first* ``n_keep`` slots in rank order (the
+    ``survivor_parents`` layout), so slot index doubles as rank.  Survivor
+    statistics use CMA-ES log-rank weights (best member weighted most); the
+    sampling covariance is that weighted survivor covariance plus an
+    isotropic ``jitter**2`` floor.  With one survivor (or zero spread) the
+    covariance vanishes and this reduces exactly to the historical isotropic
+    log-normal jitter; with several survivors spread along a ridge of the
+    fitness landscape, offspring steps elongate along that ridge.
+    """
+    d, k = coords_log.shape
+    dt = coords_log.dtype
+    n = jnp.maximum(jnp.sum(keep.astype(dt)), 1.0)
+    rank = jnp.arange(k, dtype=dt)
+    w = jnp.where(keep, jnp.log(n + 0.5) - jnp.log1p(rank), 0.0)
+    w = jnp.maximum(w, 0.0)
+    w = w / jnp.maximum(jnp.sum(w), jnp.asarray(1e-12, dt))
+    mean = coords_log @ w                                # (D,)
+    cen = (coords_log - mean[:, None]) * jnp.where(keep, 1.0, 0.0)
+    cov = (cen * w) @ cen.T                              # (D, D)
+    C = cov + (jitter ** 2) * jnp.eye(d, dtype=dt)
+    return jnp.linalg.cholesky(C)
+
+
+def adapted_clones(
+    key: Array,
+    coords: Array,
+    keep: Array,
+    jitter: float = 0.15,
+    ranges: Optional[Sequence[Tuple[float, float]]] = None,
+) -> Array:
+    """Covariance-adapted log-normal jitter on the non-surviving slots.
+
+    ``coords`` is (D, K) positive candidate coordinates (rows = dimensions,
+    e.g. (p, q) or (p, q, beta)); slots with ``keep`` True pass through
+    unchanged (bitwise).  Culled slots step from their parent coordinates by
+    a correlated draw ``L @ eps`` in log space, where ``L`` is the survivor
+    covariance Cholesky of :func:`sampling_cov_chol` - the shared CMA-ES-ish
+    upgrade of the old isotropic jitter, used by both the offline population
+    engine and the online ensemble (and the warm-pool autotuner for D=3).
+    ``ranges`` optionally clips each row back into a log10 search box.
+    """
+    d, k = coords.shape
+    eps = jax.random.normal(key, (d, k), coords.dtype)
+    L = sampling_cov_chol(jnp.log(coords), keep, jitter)
+    step = L @ eps                                       # (D, K) correlated
+    gate = jnp.where(keep, 0.0, 1.0)
+    out = coords * jnp.exp(gate * step)
+    if ranges is not None:
+        lo = jnp.asarray([10.0 ** r[0] for r in ranges], coords.dtype)
+        hi = jnp.asarray([10.0 ** r[1] for r in ranges], coords.dtype)
+        out = jnp.clip(out, lo[:, None], hi[:, None])
+    return out
+
+
 def jitter_clones(
     key: Array,
     p: Array,
@@ -135,16 +201,15 @@ def jitter_clones(
     p_range: Tuple[float, float] = P_LOG_RANGE,
     q_range: Tuple[float, float] = Q_LOG_RANGE,
 ) -> Tuple[Array, Array]:
-    """Log-normal jitter on the non-surviving slots of (p, q), clipped back
-    into the search box; surviving slots (``keep`` True) pass unchanged."""
-    k = p.shape[0]
-    eps = jax.random.normal(key, (2, k), p.dtype)
-    scale = jnp.where(keep, 0.0, jitter)
-    new_p = p * jnp.exp(scale * eps[0])
-    new_q = q * jnp.exp(scale * eps[1])
-    new_p = jnp.clip(new_p, 10.0 ** p_range[0], 10.0 ** p_range[1])
-    new_q = jnp.clip(new_q, 10.0 ** q_range[0], 10.0 ** q_range[1])
-    return new_p, new_q
+    """Covariance-adapted log-normal jitter on the non-surviving slots of
+    (p, q), clipped back into the search box; surviving slots (``keep``
+    True) pass unchanged.  See :func:`adapted_clones` for the sampling
+    model (survivor-covariance CMA-ES-style steps with an isotropic
+    ``jitter`` floor)."""
+    new = adapted_clones(
+        key, jnp.stack([p, q]), keep, jitter, ranges=(p_range, q_range)
+    )
+    return new[0], new[1]
 
 
 def cull_population(
@@ -160,9 +225,11 @@ def cull_population(
 
     ``fitness`` is (K,), lower-is-better (NRMSE, or -accuracy).  The top
     ``ceil(K * survive_frac)`` members survive verbatim (rank order); each
-    culled slot is re-seeded from a survivor (cycled) with multiplicative
-    log-normal jitter on (p, q), clipped back into the search box.  K stays
-    constant so every downstream program keeps its static shapes.
+    culled slot is re-seeded from a survivor (cycled) with covariance-adapted
+    log-normal jitter on (p, q) (CMA-ES-style: steps are drawn from the
+    rank-weighted survivor covariance in log space plus a ``jitter`` floor),
+    clipped back into the search box.  K stays constant so every downstream
+    program keeps its static shapes.
     """
     parent, keep, _ = survivor_parents(fitness, survive_frac)
     new_p, new_q = jitter_clones(

@@ -66,10 +66,17 @@ class OnlineState:
     step: Array          # int32 counter
     loss_ema: Array      # scalar diagnostics
     quant: QuantParams   # int8 serving codes + scales (inert when fp32)
+    # per-slot drift detector (retirement='adaptive'): fast/slow EMAs of
+    # the serve step's 0/1 error rate.  Inert zeros in every other mode -
+    # they ride the state tree so admission resets, retirement snapshots,
+    # donation and slot sharding cover them for free (the QuantParams
+    # pattern); the serving math never reads them.
+    loss_fast: Array     # scalar fast error EMA (drift detector numerator)
+    loss_slow: Array     # scalar slow error EMA (drift detector baseline)
 
     def tree_flatten(self):
         return (self.params, self.ridge, self.step, self.loss_ema,
-                self.quant), None
+                self.quant, self.loss_fast, self.loss_slow), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -105,6 +112,8 @@ def init_state(cfg: DFRConfig, factor_beta: Optional[float] = None) -> OnlineSta
         step=jnp.zeros((), jnp.int32),
         loss_ema=jnp.zeros((), cfg.dtype),
         quant=QuantParams.zeros(cfg.n_classes, cfg.n_rep),
+        loss_fast=jnp.zeros((), cfg.dtype),
+        loss_slow=jnp.zeros((), cfg.dtype),
     )
 
 
@@ -159,11 +168,7 @@ def reset_statistics(
             Lt=state.ridge.Lt * jnp.sqrt(lam),
             factor_beta=state.ridge.factor_beta * lam,
         )
-        return OnlineState(
-            params=state.params, ridge=rs,
-            step=state.step, loss_ema=state.loss_ema,
-            quant=state.quant,
-        )
+        return dataclasses.replace(state, ridge=rs)
     rs = jax.tree_util.tree_map(jnp.zeros_like, state.ridge)
     if factor_beta is not None:
         rs = RidgeState(
@@ -171,13 +176,110 @@ def reset_statistics(
             Lt=ridge.seed_factor(rs.B.shape[-1], factor_beta, rs.B.dtype),
             factor_beta=jnp.asarray(factor_beta, rs.B.dtype),
         )
-    return OnlineState(
-        params=state.params,
-        ridge=rs,
-        step=state.step,
-        loss_ema=state.loss_ema,
-        quant=state.quant,
+    return dataclasses.replace(state, ridge=rs)
+
+
+# retirement='adaptive': loss-EMA breakpoint detector rates (per serving
+# step, not per sample - a step folds up to `window` samples).  The fast
+# EMA tracks the current regime over a few steps; the slow EMA is the
+# baseline the break is measured against.  Server-tunable knobs (trip
+# ratio, fire-time lambda, warmup) live on StreamServer; these two rates
+# are the detector's fixed time constants.
+ADAPT_FAST_ALPHA = 0.3
+# the slow baseline is asymmetric: it chases improvements quickly (the
+# noisy just-admitted phase seeds both EMAs near error 1.0 and the
+# baseline must fall to the converged error before the detector can see a
+# jump over it) but degrades only glacially, so at a drift point it stays
+# anchored at the pre-drift error while the fast EMA runs away from it
+ADAPT_SLOW_ALPHA_DOWN = 0.15
+ADAPT_SLOW_ALPHA_UP = 0.01
+# additive trip margin on the error-rate EMAs: guards against false fires
+# when the slow baseline sits near zero (a near-perfect slot), where any
+# multiplicative ratio alone would trip on the first stray miss
+ADAPT_MARGIN = 0.25
+# floor applied to the slow baseline after its first update, so "slow == 0"
+# stays an unambiguous not-yet-initialized marker even for a slot whose
+# first observed window had zero error
+_ADAPT_EPS = 1e-6
+
+
+def adaptive_anneal(
+    states: OnlineState,
+    step_err: Array,    # (S,) this step's serving error rate (1 - acc)
+    update: Array,      # (S,) bool: slot folded live frozen-phase samples
+    armed: Array,       # (S,) bool: slot past its detector warmup
+    ratio: float,
+    forget: Array,      # scalar lambda in (0, 1] applied to a tripped slot
+) -> Tuple[OnlineState, Array]:
+    """Per-slot drift detection + soft statistics anneal (batched).
+
+    The slot-batched composition of ``reset_statistics(forget=...)`` with
+    an in-step breakpoint detector: each slot keeps fast/slow EMAs of its
+    serve-step *error rate* (the two detector leaves on ``OnlineState``);
+    a slot whose fast EMA exceeds ``ratio * slow + ADAPT_MARGIN`` *trips*
+    and has its Ridge statistics annealed by the traced per-slot forget
+    vector ``lam = where(trip, forget, 1.0)`` - (A, B) and
+    ``factor_beta`` scale by lam, any live factor by sqrt(lam), so
+    ``Lt^T Lt == B + factor_beta I`` survives exactly (the
+    ``reset_statistics`` soft-reset contract).  Tripping re-arms the
+    detector by snapping the slow baseline to the fast EMA, so it cannot
+    re-fire until the error rises again *relative to the post-drift
+    regime*.
+
+    The detector watches the 0/1 serving error (DDM-style) rather than
+    the cross-entropy loss the serve step also reports: near a drift
+    point the saturating CE loss moves by ~20% while the error rate jumps
+    several-fold, so the error signal separates drift from stationary
+    noise at far safer thresholds.
+
+    Bitwise-silence contract: the anneal is ``lax.cond``-gated on any slot
+    tripping, so a step where no detector fires leaves ``ridge`` (and
+    everything downstream of it) bit-for-bit untouched - only the two
+    detector leaves move.  EMAs update only where ``update`` is set (live
+    slots folding frozen-phase samples); the first such step seeds both
+    EMAs with the observed error.
+    """
+    fast0, slow0 = states.loss_fast, states.loss_slow
+    init = update & (slow0 <= 0)
+    fa = jnp.asarray(ADAPT_FAST_ALPHA, fast0.dtype)
+    sa = jnp.where(
+        step_err <= slow0,
+        jnp.asarray(ADAPT_SLOW_ALPHA_DOWN, slow0.dtype),
+        jnp.asarray(ADAPT_SLOW_ALPHA_UP, slow0.dtype),
     )
+    fast = jnp.where(
+        init, step_err,
+        jnp.where(update, (1.0 - fa) * fast0 + fa * step_err, fast0),
+    )
+    slow = jnp.where(
+        init, step_err,
+        jnp.where(update, (1.0 - sa) * slow0 + sa * step_err, slow0),
+    )
+    slow = jnp.where(
+        update, jnp.maximum(slow, jnp.asarray(_ADAPT_EPS, slow.dtype)), slow
+    )
+    trip = (
+        update & armed & ~init
+        & (fast > jnp.asarray(ratio, fast.dtype) * slow
+           + jnp.asarray(ADAPT_MARGIN, fast.dtype))
+    )
+    lam = jnp.where(trip, jnp.asarray(forget, fast.dtype), 1.0)  # (S,)
+
+    def _anneal(rs: RidgeState) -> RidgeState:
+        lam2 = lam[:, None, None]
+        return RidgeState(
+            A=rs.A * lam2, B=rs.B * lam2, count=rs.count,
+            Lt=rs.Lt * jnp.sqrt(lam)[:, None, None],
+            factor_beta=rs.factor_beta * lam,
+        )
+
+    ridge_state = jax.lax.cond(
+        jnp.any(trip), _anneal, lambda rs: rs, states.ridge
+    )
+    slow = jnp.where(trip, fast, slow)
+    return dataclasses.replace(
+        states, ridge=ridge_state, loss_fast=fast, loss_slow=slow
+    ), trip
 
 
 def online_logits(
@@ -280,6 +382,8 @@ def online_step(
         step=state.step + 1,
         loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
         quant=state.quant,
+        loss_fast=state.loss_fast,
+        loss_slow=state.loss_slow,
     )
     logits = r @ params.W.T + params.b
     hits = (jnp.argmax(logits, -1) == label).astype(jnp.float32)
@@ -487,6 +591,8 @@ def online_serve_step(
         step=state.step + 1,
         loss_ema=0.99 * state.loss_ema + 0.01 * loss * inv,
         quant=quant,
+        loss_fast=state.loss_fast,
+        loss_slow=state.loss_slow,
     )
     hits = (jnp.argmax(aux.logits, -1) == label).astype(jnp.float32) * w
     metrics = {"loss": loss * inv, "acc": jnp.sum(hits) * inv}
@@ -650,6 +756,8 @@ def _state_logical_axes(*leading: str) -> OnlineState:
             Wq=lead + (None, None),
             w_scale=lead, x_scale=lead, x_absmax=lead,
         ),
+        loss_fast=lead,
+        loss_slow=lead,
     )
 
 
@@ -849,7 +957,12 @@ class OnlineEnsemble:
 
         Survivors keep everything; each culled slot inherits its parent's
         full state, gets jittered (p, q), and restarts its Ridge statistics
-        (stale under the moved reservoir parameters).
+        (stale under the moved reservoir parameters).  The restart follows
+        ``reset_statistics(factor_beta=...)``: a culled row that inherited a
+        *live* incremental factor gets a fresh ``ridge.seed_factor`` seed
+        (chol(0 + beta I) = sqrt(beta) I) rather than an all-zero ``Lt``,
+        which would be a singular fake factor violating
+        ``Lt^T Lt == B + factor_beta I`` and NaN on the next maintained fold.
         """
         parent, keep, _ = candidates.survivor_parents(
             state.loss_ema, survive_frac
@@ -864,5 +977,15 @@ class OnlineEnsemble:
             k_mask = keep.reshape((-1,) + (1,) * (leaf.ndim - 1))
             return jnp.where(k_mask, leaf, jnp.zeros_like(leaf))
 
-        ridge_state = jax.tree_util.tree_map(_keep_or_zero, inherited.ridge)
+        zeroed = jax.tree_util.tree_map(_keep_or_zero, inherited.ridge)
+        beta_inh = inherited.ridge.factor_beta            # (K,)
+        s = inherited.ridge.Lt.shape[-1]
+        seeded_Lt = jnp.sqrt(beta_inh)[:, None, None] * jnp.eye(
+            s, dtype=inherited.ridge.Lt.dtype
+        )
+        ridge_state = dataclasses.replace(
+            zeroed,
+            Lt=jnp.where(keep[:, None, None], inherited.ridge.Lt, seeded_Lt),
+            factor_beta=beta_inh,
+        )
         return dataclasses.replace(inherited, params=params, ridge=ridge_state)

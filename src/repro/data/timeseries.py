@@ -17,6 +17,7 @@ means cannot.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
@@ -109,7 +110,10 @@ def make_dataset(
     ``size_cap`` optionally bounds Train/Test counts (for fast CI runs);
     class balance is preserved.
     """
-    rng = np.random.default_rng(seed + abs(hash(spec.name)) % (2**31))
+    # zlib.crc32 is a stable digest: Python's str hash is randomized per
+    # process (PYTHONHASHSEED), which silently made "deterministic per seed"
+    # datasets differ across runs/CI machines.
+    rng = np.random.default_rng(seed + zlib.crc32(spec.name.encode()) % (2**31))
     amp, cycles, phase = _gen_class_params(rng, spec.n_classes, spec.n_in)
 
     def gen_split(n: int, split_seed: int) -> TimeSeriesBatch:

@@ -29,7 +29,11 @@ int8 quantization leaves (``QuantParams``: per-slot ``Wq`` int8 codes,
 the slot axis like every other ``SlotStates`` leaf, so the same
 ``P("slot", ...)`` placement covers them and the sharded quantized
 episode stays bitwise the single-device one (CI: the forced-8-device
-sharded x quantized parity tests).
+sharded x quantized parity tests).  The PR-9 adaptive-retirement
+detector leaves (``loss_fast``/``loss_slow``: per-slot error-rate EMAs)
+follow the identical pattern - ``(S,)`` scalars-per-slot leading with
+the slot axis, annealing reads/writes only the owning device's rows, so
+``retirement='adaptive'`` composes with slot sharding with no new rule.
 
 A ``MeshContext`` (set by the launcher) makes ``shard_act`` constraints
 active; without one everything is a no-op so unit tests run untouched.

@@ -57,6 +57,7 @@ import functools
 import json
 import os
 import platform
+import tempfile
 import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -246,9 +247,21 @@ def get_calibration(path: Optional[str] = None,
                 pass        # stale/foreign file: fall through to re-measure
     cal = calibrate()
     try:
-        with open(path, "w") as fh:
-            json.dump(cal.to_json(), fh, indent=2)
-            fh.write("\n")
+        # atomic publish: concurrent calibrators (the sharded bench's
+        # re-exec subprocesses, the forced-8-device CI lane) must never
+        # expose a torn half-written JSON to a concurrent reader
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path) or ".",
+            prefix=os.path.basename(path) + ".tmp",
+        )
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(cal.to_json(), fh, indent=2)
+                fh.write("\n")
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
     except OSError:
         pass                # read-only cwd: stay in-process-cached only
     _CAL_CACHE[path] = cal

@@ -315,6 +315,8 @@ def _step_core(
     maintain_factor: bool = False,
     retirement: str = "none",
     quantize: str = "none",
+    adapt_ratio: float = 1.2,
+    adapt_warmup: int = 4,
 ) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
     """One server step: infer-before-update + train for every live slot.
 
@@ -339,7 +341,13 @@ def _step_core(
     deferred update fold, then - only when some slot's downdate hit the
     numerical guard - re-factorizes exactly those slots' live factors from
     their retained ``B + beta I`` (one cond-gated batched Cholesky, never
-    executed on the clean steady-state path).
+    executed on the clean steady-state path); ``'adaptive'`` runs the
+    per-slot loss-EMA breakpoint detector (``online.adaptive_anneal``)
+    on the serve step's own loss metric - the ``forget`` operand becomes
+    the fire-time lambda, applied through a traced (S,) per-slot forget
+    vector only to tripped slots, cond-gated so a silent step is bitwise
+    the ``retirement='none'`` step on everything but the two detector
+    EMA leaves.
 
     ``quantize='int8'`` (static) serves ARMED slots from the int8 fast
     path (``ops.streaming_logits_slots_q8``: coded reservoir state +
@@ -508,6 +516,22 @@ def _step_core(
                     new_states.ridge, Lt=Lt, A=A, B=B, count=count
                 ),
             )
+    if retirement == "adaptive":
+        # per-slot drift detection on the serving error rate the serve step
+        # already produced: EMAs update for live slots that folded
+        # frozen-phase samples; a tripped slot's statistics anneal by the
+        # traced (S,) forget vector (lam=1.0 elsewhere), cond-gated on any
+        # trip so the silent path stays bitwise retirement='none'.  Runs
+        # AFTER the factor fold: the anneal scales the post-fold factor
+        # consistently (Lt by sqrt(lam), factor_beta by lam).  A tripped
+        # int8 slot needs no special handling - its quant scales re-fold
+        # (re-arm) at its next refresh boundary like any other refresh.
+        update = live & (~in_phase1) & (jnp.sum(weight, axis=1) > 0)
+        armed = new_states.step >= phase_steps + jnp.int32(adapt_warmup)
+        new_states, _ = online.adaptive_anneal(
+            new_states, 1.0 - metrics["acc"], update, armed,
+            adapt_ratio, forget,
+        )
     return new_states, win, preds, metrics
 
 
@@ -530,6 +554,8 @@ def _stream_step_impl(
     fused_infer: bool = True,
     maintain_factor: bool = False,
     retirement: str = "none",
+    adapt_ratio: float = 1.2,
+    adapt_warmup: int = 4,
 ) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
     """Host-staged serving step (the retained PR-4 fallback): the caller
     builds and uploads the padded window batch; see ``_step_core``."""
@@ -538,10 +564,12 @@ def _stream_step_impl(
         live, lr, phase_steps, beta, forget, win,
         fused_infer=fused_infer, maintain_factor=maintain_factor,
         retirement=retirement,
+        adapt_ratio=adapt_ratio, adapt_warmup=adapt_warmup,
     )
 
 
-_STEP_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement")
+_STEP_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement",
+                 "adapt_ratio", "adapt_warmup")
 _stream_step = jax.jit(_stream_step_impl, static_argnames=_STEP_STATICS)
 # donated twin: OnlineState (arg 2) and WindowState (arg 14) update in place
 _stream_step_donated = jax.jit(
@@ -596,6 +624,8 @@ def _stream_step_pool_impl(
     refresh_mode: str = "recompute",
     window: int = 1,
     quantize: str = "none",
+    adapt_ratio: float = 1.2,
+    adapt_warmup: int = 4,
 ) -> Tuple[OnlineState, Optional[WindowState], Array]:
     """Device-resident serving step: cursor-indexed window gather from the
     staged ``RequestPool``, the fused serve step, and the cohort Ridge
@@ -623,6 +653,7 @@ def _stream_step_pool_impl(
         live, lr, phase_steps, beta, forget, win,
         fused_infer=fused_infer, maintain_factor=maintain_factor,
         retirement=retirement, quantize=quantize,
+        adapt_ratio=adapt_ratio, adapt_warmup=adapt_warmup,
     )
 
     def _refresh(st: OnlineState) -> OnlineState:
@@ -647,7 +678,8 @@ def _stream_step_pool_impl(
 
 
 _POOL_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement",
-                 "refresh_mode", "window", "quantize")
+                 "refresh_mode", "window", "quantize",
+                 "adapt_ratio", "adapt_warmup")
 _stream_step_pool = jax.jit(
     _stream_step_pool_impl, static_argnames=_POOL_STATICS
 )
@@ -684,6 +716,8 @@ def _stream_step_pool_block_impl(
     refresh_mode: str = "recompute",
     window: int = 1,
     quantize: str = "none",
+    adapt_ratio: float = 1.2,
+    adapt_warmup: int = 4,
 ) -> Tuple[OnlineState, Optional[WindowState], Array]:
     """Multi-sample step blocking: up to B = ``step_block`` consecutive
     pool steps in ONE dispatch, a ``lax.scan`` over the fused serving step.
@@ -721,6 +755,7 @@ def _stream_step_pool_block_impl(
                 fused_infer=fused_infer, maintain_factor=maintain_factor,
                 retirement=retirement, refresh_mode=refresh_mode,
                 window=window, quantize=quantize,
+                adapt_ratio=adapt_ratio, adapt_warmup=adapt_warmup,
             )
             return ns, nw, preds.astype(jnp.int32)
 
@@ -970,6 +1005,15 @@ class StreamServer:
         ``refresh_mode='incremental'`` (the downdate needs the live
         factor).  The equivalence contract: a capacity >= the stream
         length serves bit-for-bit the ``retirement='none'`` episode.
+      * ``retirement='adaptive'`` - per-slot loss-EMA breakpoint detector
+        inside the fused step: when a slot's fast loss EMA exceeds
+        ``adapt_ratio`` x its slow EMA (past a ``adapt_warmup``-step
+        arming period), that slot's ridge statistics are annealed once by
+        ``adapt_forget`` (the ``reset_statistics(forget=...)`` semantics)
+        and the detector re-arms.  No per-sample decay, no window buffer,
+        no extra knobs to hand-tune per stream.  The equivalence
+        contract: an episode in which the detector never fires serves
+        bit-for-bit the ``retirement='none'`` episode.
 
     Serving pipeline (PR 5, see the module docstring):
 
@@ -1043,6 +1087,9 @@ class StreamServer:
         retirement: str = "none",
         forget: float = 1.0,
         retire_window: int = 0,
+        adapt_forget: float = 0.12,
+        adapt_ratio: float = 1.2,
+        adapt_warmup: int = 4,
         staging: str = "device",
         pipeline_depth: int = 0,
         donate: bool = True,
@@ -1087,10 +1134,23 @@ class StreamServer:
             step_block = 1
         if refresh_mode not in ("recompute", "incremental"):
             raise ValueError(f"unknown refresh_mode: {refresh_mode!r}")
-        if retirement not in ("none", "forget", "window"):
+        if retirement not in ("none", "forget", "window", "adaptive"):
             raise ValueError(f"unknown retirement: {retirement!r}")
         if retirement == "forget" and not 0.0 < forget <= 1.0:
             raise ValueError(f"forget must be in (0, 1], got {forget!r}")
+        if retirement == "adaptive":
+            if not 0.0 < adapt_forget <= 1.0:
+                raise ValueError(
+                    f"adapt_forget must be in (0, 1], got {adapt_forget!r}"
+                )
+            if adapt_ratio <= 1.0:
+                raise ValueError(
+                    f"adapt_ratio must be > 1, got {adapt_ratio!r}"
+                )
+            if adapt_warmup < 0:
+                raise ValueError(
+                    f"adapt_warmup must be >= 0, got {adapt_warmup!r}"
+                )
         if retirement == "window":
             if refresh_mode != "incremental":
                 raise ValueError(
@@ -1152,7 +1212,15 @@ class StreamServer:
         self.beta = jnp.asarray(beta, cfg.dtype)
         self.refresh_mode = refresh_mode
         self.retirement = retirement
-        self.forget = jnp.asarray(forget, cfg.dtype)
+        # adaptive mode re-purposes the ``forget`` operand slot as the
+        # fire-time anneal factor (it is unused by 'none'/'window', and the
+        # serve step still receives forget=None so no per-sample decay is
+        # compiled in) - zero operand-signature changes across all modes
+        self.forget = jnp.asarray(
+            adapt_forget if retirement == "adaptive" else forget, cfg.dtype
+        )
+        self.adapt_ratio = float(adapt_ratio)
+        self.adapt_warmup = int(adapt_warmup)
         self.retire_window = int(retire_window)
         self.staging = staging
         self.pipeline_depth = int(pipeline_depth)
@@ -1243,6 +1311,7 @@ class StreamServer:
         self._due_cache: Dict[int, Tuple[Array, Array, Array]] = {}
         self._due_block_cache: Dict[Tuple, Tuple] = {}
         self.global_step = 0
+        self._autotuner = None  # optional WarmPoolAutotuner (attach_autotuner)
         # async pipeline: (device preds, per-slot bookkeeping meta) entries,
         # drained once more than pipeline_depth steps are in flight
         self._inflight: Deque[Tuple[Array, List[Tuple]]] = deque()
@@ -1298,6 +1367,16 @@ class StreamServer:
                     RequestPool.slot_axes(), mesh=self.mesh,
                 ),
             )
+
+    def attach_autotuner(self, tuner) -> None:
+        """Attach a ``repro.runtime.autotuner.WarmPoolAutotuner``: after
+        every ``step()`` the tuner applies any hyperparameter hot swaps due
+        at a cohort refresh boundary and (at its own low rate) runs one
+        background (p, q, beta) tuning round.  A tuner that never swaps
+        leaves the served episode bit-for-bit unchanged."""
+        if tuner.server is not self:
+            raise ValueError("tuner was constructed for a different server")
+        self._autotuner = tuner
 
     def submit(self, req: StreamRequest) -> None:
         if req.u.shape[1] != self.t_max:
@@ -1445,6 +1524,8 @@ class StreamServer:
             fused_infer=self.fused_infer,
             maintain_factor=(self.refresh_mode == "incremental"),
             retirement=self.retirement,
+            adapt_ratio=self.adapt_ratio,
+            adapt_warmup=self.adapt_warmup,
         )
         if self.staging == "device":
             pool_kw = dict(
@@ -1544,6 +1625,8 @@ class StreamServer:
                 req.final_state = self._snapshot_row(i)
                 self.sched.retire(i)   # continuous batching: slot refills
         self._inflight.append((preds, meta))
+        if self._autotuner is not None:
+            self._autotuner.on_step()
         self.dispatch_times_s.append(time.perf_counter() - t_start)
         while len(self._inflight) > self.pipeline_depth:
             self._drain_one()

@@ -12,6 +12,10 @@ Contract under test (``repro.data.make_narma10_drift`` /
   * unstable coefficient choices raise instead of returning NaNs,
   * ``quantize_targets`` is deterministic and respects provided edges.
 """
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
@@ -104,3 +108,29 @@ def test_quantize_targets_edges_and_determinism():
     assert np.all(lab_hi == 3)
     lab_rep, _ = quantize_targets(y, 4, edges)
     np.testing.assert_array_equal(lab, lab_rep)
+
+
+def test_make_dataset_stable_across_hash_randomization():
+    """Regression: ``make_dataset`` once mixed ``hash(spec.name)`` into its
+    RNG seed; Python randomizes str hashes per process (PYTHONHASHSEED), so
+    "deterministic per seed" datasets silently differed across runs and CI
+    machines.  The digest is now ``zlib.crc32`` - two subprocesses forced
+    to DIFFERENT hash seeds must produce byte-identical datasets."""
+    prog = (
+        "import numpy as np, sys\n"
+        "from repro.data import load\n"
+        "tr, te = load('JPVOW', size_cap=12)\n"
+        "for a in (tr.u, tr.length, tr.label, te.u, te.length, te.label):\n"
+        "    sys.stdout.write(np.asarray(a).tobytes().hex())\n"
+    )
+    outs = []
+    for hash_seed in ("1", "2"):
+        r = subprocess.run(
+            [sys.executable, "-c", prog],
+            capture_output=True, text=True, timeout=600,
+            env={**os.environ, "PYTHONHASHSEED": hash_seed,
+                 "JAX_PLATFORMS": "cpu"},
+        )
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1] and len(outs[0]) > 0

@@ -178,6 +178,64 @@ def test_get_calibration_rejects_foreign_fingerprint(tmp_path, monkeypatch):
     assert json.loads(path.read_text())["c_flop"] == 7.5e-7
 
 
+def test_get_calibration_recovers_from_torn_file(tmp_path, monkeypatch):
+    """Regression: a half-written calibration (a crashed writer before the
+    publish was made atomic) must re-measure and overwrite, not crash."""
+    path = tmp_path / "cal.json"
+    good = json.dumps(_cal().to_json())
+    path.write_text(good[: len(good) // 2])   # torn mid-document
+    fresh = _cal(c_flop=3.5e-8, fingerprint=planner._host_fingerprint())
+    monkeypatch.setattr(planner, "calibrate", lambda *a, **k: fresh)
+    got = planner.get_calibration(str(path))
+    assert got.c_flop == 3.5e-8
+    assert json.loads(path.read_text())["c_flop"] == 3.5e-8
+    # no stray temp files left behind by the atomic publish
+    assert [p.name for p in tmp_path.iterdir()] == ["cal.json"]
+
+
+def test_get_calibration_concurrent_writers_never_tear(tmp_path, monkeypatch):
+    """The mkstemp + os.replace publish is atomic: with many concurrent
+    calibrators hammering the same path, every read of the file - at any
+    instant - parses as a complete calibration document."""
+    import threading
+
+    path = str(tmp_path / "cal.json")
+    fresh = _cal(c_flop=9e-9, fingerprint=planner._host_fingerprint())
+    monkeypatch.setattr(planner, "calibrate", lambda *a, **k: fresh)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        for _ in range(50):
+            planner._CAL_CACHE.clear()         # force the re-measure+publish
+            try:
+                planner.get_calibration(path)
+            except Exception as e:             # pragma: no cover
+                errors.append(e)
+
+    def reader():
+        while not stop.is_set():
+            try:
+                with open(path) as fh:
+                    Calibration.from_json(json.load(fh))
+            except FileNotFoundError:
+                pass                           # not yet published
+            except Exception as e:             # pragma: no cover
+                errors.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    rt = threading.Thread(target=reader)
+    rt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not errors
+    assert json.loads(open(path).read())["c_flop"] == 9e-9
+
+
 # -- StreamServer(config='auto') wiring --------------------------------------
 
 

@@ -233,6 +233,55 @@ def test_cull_keeps_best_and_reseeds_worst():
     assert not np.allclose(np.asarray(culled.p[4:]), np.asarray(ps[:4]))
 
 
+def test_seed_candidates_anchor_exempt_from_clipping():
+    """Regression: member 0 is the documented *exact* anchor - an
+    out-of-search-box (p_init, q_init) must come back verbatim (the clip
+    used to silently move it onto the box edge, breaking the K=1 ensemble
+    == single-system parity contract for such configs).  Members 1..K-1
+    still clip into the box."""
+    from repro.core import candidates
+
+    p0, q0 = 0.9, 0.9            # above both boxes' upper edge 10**-0.25
+    ps, qs = candidates.seed_candidates(jax.random.PRNGKey(0), 6, p0, q0,
+                                        jitter=0.5)
+    assert float(ps[0]) == np.float32(p0) and float(qs[0]) == np.float32(q0)
+    p_hi = 10.0 ** candidates.P_LOG_RANGE[1]
+    q_hi = 10.0 ** candidates.Q_LOG_RANGE[1]
+    assert np.all(np.asarray(ps[1:]) <= p_hi)
+    assert np.all(np.asarray(qs[1:]) <= q_hi)
+    # in-box anchors are exact too (the historical behavior)
+    ps_in, qs_in = candidates.seed_candidates(jax.random.PRNGKey(1), 4,
+                                              0.01, 0.01)
+    assert float(ps_in[0]) == np.float32(0.01)
+    assert float(qs_in[0]) == np.float32(0.01)
+
+
+def test_adapted_clones_covariance_and_passthrough():
+    """The CMA-ES-style cull upgrade: survivors pass through bitwise, culled
+    slots step inside the clip box, and with a single survivor the sampler
+    reduces to the isotropic jitter (covariance floor only)."""
+    from repro.core import candidates
+
+    coords = jnp.asarray([[0.01, 0.02, 0.05, 0.04],
+                          [0.03, 0.01, 0.02, 0.06]], jnp.float32)
+    keep = jnp.asarray([True, True, False, False])
+    out = candidates.adapted_clones(
+        jax.random.PRNGKey(0), coords, keep, jitter=0.3,
+        ranges=(candidates.P_LOG_RANGE, candidates.Q_LOG_RANGE))
+    np.testing.assert_array_equal(np.asarray(out[:, :2]),
+                                  np.asarray(coords[:, :2]))
+    assert not np.array_equal(np.asarray(out[:, 2:]),
+                              np.asarray(coords[:, 2:]))
+    for d, (lo, hi) in enumerate((candidates.P_LOG_RANGE,
+                                  candidates.Q_LOG_RANGE)):
+        assert np.all(np.asarray(out[d]) >= 10.0 ** lo - 1e-7)
+        assert np.all(np.asarray(out[d]) <= 10.0 ** hi + 1e-7)
+    # single survivor: L == jitter * I exactly (no covariance term)
+    one = jnp.asarray([True, False, False, False])
+    L = candidates.sampling_cov_chol(jnp.log(coords), one, 0.3)
+    np.testing.assert_allclose(np.asarray(L), 0.3 * np.eye(2), atol=1e-6)
+
+
 def test_refine_population_matches_per_member_sgd(cls_setup):
     """One vmapped refinement epoch == running each member's truncated-BP
     SGD loop individually."""

@@ -399,6 +399,59 @@ def test_ensemble_cull_reseeds_losers():
     assert p[2] != p[0] and p[3] != p[1]  # jitter moved the clones
 
 
+def test_ensemble_cull_reseeds_live_factor_not_zeros():
+    """Regression: a culled member that inherited a LIVE incremental factor
+    must restart with ``seed_factor`` (chol(0 + beta I) = sqrt(beta) I),
+    not an all-zero Lt - zero would be a singular fake factor violating
+    ``Lt^T Lt == B + factor_beta I`` and NaN on the next maintained fold.
+    Survivors keep their factor verbatim."""
+    import dataclasses as dc
+    from repro.core import online
+
+    cfg = DFRConfig(n_in=2, n_classes=2, n_nodes=6)
+    ens = OnlineEnsemble(cfg, 4, seed_jitter=0.2)
+    beta = 0.25
+    st = jax.vmap(lambda s: online.reset_statistics(s, factor_beta=beta))(
+        ens.init())
+    # fold real samples through the maintained path so Lt is non-trivial
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.normal(size=(3, 10, 2)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(3, 11, 3), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, 2, 3), jnp.int32)
+    lr0, w1, acc1 = (jnp.float32(0.0), jnp.ones(3, jnp.float32),
+                     jnp.float32(1.0))
+    st, _, _ = jax.vmap(
+        lambda s: online.online_serve_step(
+            cfg, ens.mask, s, u, ln, lab, lr0, w1, acc1,
+            maintain_factor=True)
+    )(st)
+    st = dc.replace(st, loss_ema=jnp.asarray([0.0, 0.1, 0.9, 1.0]))
+    culled = ens.cull(st, jax.random.PRNGKey(0), survive_frac=0.5)
+
+    s = cfg.s
+    Lt = np.asarray(culled.ridge.Lt)
+    B = np.asarray(culled.ridge.B)
+    fb = np.asarray(culled.ridge.factor_beta)
+    np.testing.assert_allclose(fb, beta, rtol=1e-6)
+    # survivors (ranks 0, 1 == members 0, 1): factor untouched
+    np.testing.assert_array_equal(Lt[:2], np.asarray(st.ridge.Lt)[:2])
+    # culled rows: fresh sqrt(beta) I seed, and the invariant holds on the
+    # zeroed statistics (Lt^T Lt == 0 + beta I)
+    for i in (2, 3):
+        np.testing.assert_allclose(Lt[i], np.sqrt(beta) * np.eye(s),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(Lt[i].T @ Lt[i], B[i] + beta * np.eye(s),
+                                   rtol=1e-5, atol=1e-6)
+    # the re-seeded factor is non-singular: one more maintained fold stays
+    # finite (the regression scenario was a NaN here)
+    after, _, _ = jax.vmap(
+        lambda s_: online.online_serve_step(
+            cfg, ens.mask, s_, u, ln, lab, lr0, w1, acc1,
+            maintain_factor=True)
+    )(culled)
+    assert np.isfinite(np.asarray(after.ridge.Lt)).all()
+
+
 def test_online_step_weight_masks_dead_samples_exactly():
     """The 0/1 sample weight (the stream server's tail-window mechanism) is
     exact: a window padded with dead samples produces the same state as the

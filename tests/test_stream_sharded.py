@@ -369,6 +369,102 @@ def test_sharded_cohort_schedule_rejects_indivisible():
 
 
 # ---------------------------------------------------------------------------
+# _sharded_fixed direct unit battery (the padding construction itself)
+# ---------------------------------------------------------------------------
+
+
+def _sharded_fixed_corners():
+    """(n_slots, refresh_every, n_cohorts, n_shards) corner grid: single
+    cohort (r_loc == s_loc, empty pad pool), one-slot shards, cohorts >
+    period (clamped), misaligned cohort stride vs shard blocks, max
+    padding (one giant cohort among many shards)."""
+    return [
+        (4, 3, 1, 1), (4, 3, 1, 2), (4, 3, 1, 4),      # r_loc == s_loc
+        (8, 5, 2, 2), (8, 5, 2, 8),                     # s_loc == 1
+        (8, 2, 5, 2),                                   # cohorts clamped
+        (6, 4, 2, 2), (6, 6, 4, 3), (12, 5, 5, 4),     # misaligned strides
+        (16, 8, 8, 2), (24, 12, 5, 8),
+    ]
+
+
+def test_sharded_fixed_blocks_are_duplicate_free_and_in_range():
+    """Every (cohort, shard) block holds r_loc DISTINCT local indices in
+    [0, s_loc) - the property that makes the traced refresh scatter safe
+    (a duplicate index would make the padded no-op write race the real
+    refresh write) - and the ok'd ones are exactly the cohort's local
+    members."""
+    for n_slots, refresh_every, n_cohorts, n_shards in _sharded_fixed_corners():
+        coh = RefreshCohorts(n_slots, refresh_every, n_cohorts)
+        s_loc = n_slots // n_shards
+        r_loc, fixed = coh._sharded_fixed(n_shards)
+        assert set(fixed) == set(coh.offsets)
+        for c, phase in enumerate(coh.offsets):
+            rows, ok = fixed[phase]
+            assert rows.shape == ok.shape == (n_shards * r_loc,)
+            for d in range(n_shards):
+                blk = rows[d * r_loc:(d + 1) * r_loc].tolist()
+                okb = ok[d * r_loc:(d + 1) * r_loc].tolist()
+                assert all(0 <= j < s_loc for j in blk)
+                assert len(set(blk)) == r_loc, (
+                    f"duplicate local rows in shard {d} of cohort {c}: {blk}")
+                want = {i - d * s_loc for i in range(n_slots)
+                        if coh.cohort_of_slot[i] == c
+                        and d * s_loc <= i < (d + 1) * s_loc}
+                assert {j for j, o in zip(blk, okb) if o} == want
+
+
+def test_sharded_fixed_pad_pool_never_exhausts():
+    """r_loc (the common padded width) never exceeds s_loc, so the pad
+    pool of non-member local indices always covers the demand - the
+    ``pad_pool.pop(0) if pad_pool else 0`` fallback (which would introduce
+    a duplicate row) is unreachable.  Checked structurally: padding demand
+    r_loc - len(members) never exceeds the pool s_loc - len(members)."""
+    for n_slots, refresh_every, n_cohorts, n_shards in _sharded_fixed_corners():
+        coh = RefreshCohorts(n_slots, refresh_every, n_cohorts)
+        s_loc = n_slots // n_shards
+        r_loc, _ = coh._sharded_fixed(n_shards)
+        assert 1 <= r_loc <= s_loc
+        for c in range(coh.n_cohorts):
+            for d in range(n_shards):
+                m = sum(1 for i in range(n_slots)
+                        if coh.cohort_of_slot[i] == c
+                        and d * s_loc <= i < (d + 1) * s_loc)
+                assert r_loc - m <= s_loc - m
+
+
+def test_sharded_fixed_single_cohort_is_full_permutation():
+    """n_cohorts=1 is the r_loc == s_loc corner: the one cohort owns every
+    slot, the pad pool is empty AND no padding is needed - each shard
+    block must be a full permutation of range(s_loc), all ok."""
+    for n_slots, n_shards in ((4, 1), (4, 2), (8, 4), (8, 8), (24, 3)):
+        coh = RefreshCohorts(n_slots, 5, 1)
+        s_loc = n_slots // n_shards
+        r_loc, fixed = coh._sharded_fixed(n_shards)
+        assert r_loc == s_loc
+        (rows, ok), = fixed.values()
+        assert ok.all()
+        for d in range(n_shards):
+            assert sorted(rows[d * s_loc:(d + 1) * s_loc].tolist()) \
+                == list(range(s_loc))
+
+
+def test_sharded_fixed_misaligned_stride_flags():
+    """n_slots=6, n_shards=2, n_cohorts=2: cohort 0 = {0, 2, 4} straddles
+    both 3-slot shard blocks unevenly (2 members in shard 0, 1 in shard
+    1), so shard 1's block needs one ok=False pad distinct from its
+    member."""
+    coh = RefreshCohorts(6, 4, 2)
+    r_loc, fixed = coh._sharded_fixed(2)
+    assert r_loc == 2
+    rows, ok = fixed[coh.offsets[0]]          # cohort 0
+    s0, o0 = rows[:2].tolist(), ok[:2].tolist()
+    s1, o1 = rows[2:].tolist(), ok[2:].tolist()
+    assert sorted(j for j, o in zip(s0, o0) if o) == [0, 2]
+    assert sorted(j for j, o in zip(s1, o1) if o) == [1]   # global slot 4
+    assert len(set(s1)) == 2                  # the pad is distinct
+
+
+# ---------------------------------------------------------------------------
 # Single-device fallback: run the battery under a forced-8-device subprocess
 # ---------------------------------------------------------------------------
 
