@@ -1,7 +1,16 @@
-"""Backprop-vs-grid-search benchmarks: paper Tables 5 and 6, Fig. 7."""
+"""Backprop-vs-grid-search benchmarks: paper Tables 5 and 6, Fig. 7.
+
+Also owns the fused-training-kernel table (PR 10): ``train_fused_table``
+measures the no-materialized-X fused forward + closed-form truncated VJP
+(``backprop.grads_truncated_fused``) against the scan baseline
+(``grads_truncated``: run_reservoir -> stacked X -> compute_dprr ->
+autodiff), with host-independent HLO memory columns proving the
+O(T Nx) -> O(Nx^2) per-sample activation-memory drop.
+"""
 from __future__ import annotations
 
 import time
+from functools import partial
 from typing import Dict, List
 
 from repro.core import DFRModel
@@ -91,3 +100,199 @@ def run(full: bool = False) -> List[Dict]:
     rows = table5_bp_vs_grid(datasets=sets)
     rows += table6_accuracy_context(("JPVOW",) if not full else tuple(PAPER_TABLE6))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Fused training-path kernel vs scan baseline (PR 10)
+# ---------------------------------------------------------------------------
+
+
+def _best_time(fn, *args, reps: int = 3) -> float:
+    import jax
+
+    out = fn(*args)                       # warm the jit cache
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _paired_times(fn_a, fn_b, *args, reps: int = 3):
+    """Best-of-``reps`` for two programs with ALTERNATING reps (the PR-5
+    paired round-robin protocol): back-to-back A/B pairs see the same
+    host load, so their ratio is robust to drift that would skew
+    timing all of A then all of B."""
+    import jax
+
+    for fn in (fn_a, fn_b):               # warm both jit caches first
+        jax.block_until_ready(fn(*args))
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def _program_memory(fn, *args) -> Dict:
+    """Host-independent memory columns of ``jit(fn)(*args)``: HLO traffic
+    bytes (launch.hlo_cost) and - where XLA exposes it - the compiled
+    executable's temp-buffer allocation, the direct witness that the
+    (B, T, Nx) state sequence is (or is not) materialized between the
+    forward and the backward."""
+    import jax
+
+    from repro.launch import hlo_cost
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    out = {"hlo_flops": cost.flops, "hlo_mem_bytes": cost.mem_bytes}
+    try:
+        out["temp_alloc_bytes"] = int(
+            compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:                     # backend doesn't expose it
+        out["temp_alloc_bytes"] = None
+    return out
+
+
+def _train_fused_cell(nx: int, b: int, t_len: int, reps: int) -> Dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import backprop as bp
+    from repro.core.types import DFRParams
+
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=nx, nonlinearity="tanh")
+    f = cfg.f()
+    key = jax.random.PRNGKey(nx * 1000 + b)
+    params = DFRParams(
+        p=jnp.float32(0.3), q=jnp.float32(0.4),
+        W=0.05 * jax.random.normal(key, (4, cfg.n_rep)),
+        b=jnp.zeros(4, jnp.float32),
+    )
+    j_seq = jax.random.normal(jax.random.PRNGKey(b), (b, t_len, nx),
+                              jnp.float32)
+    lengths = jnp.full((b,), t_len, jnp.int32)
+    onehot = jax.nn.one_hot(jnp.arange(b) % 4, 4)
+
+    scan_fn = jax.jit(lambda pp, j, y, le: bp.grads_truncated(
+        pp, j, y, f, le))
+    fused_fn = jax.jit(lambda pp, j, y, le: bp.grads_truncated_fused(
+        pp, j, y, f, le))
+    t_scan, t_fused = _paired_times(scan_fn, fused_fn, params, j_seq,
+                                    onehot, lengths, reps=reps)
+    mem_scan = _program_memory(
+        lambda pp, j, y, le: bp.grads_truncated(pp, j, y, f, le),
+        params, j_seq, onehot, lengths)
+    mem_fused = _program_memory(
+        lambda pp, j, y, le: bp.grads_truncated_fused(pp, j, y, f, le),
+        params, j_seq, onehot, lengths)
+    return {
+        "table": "train-fused", "cell": f"Nx{nx}/B{b}/T{t_len}",
+        "fused_time_s": round(t_fused, 6),
+        "scan_samples_per_s": round(b / t_scan, 1),
+        "fused_samples_per_s": round(b / t_fused, 1),
+        "fused_over_scan_speedup": round(t_scan / t_fused, 3),
+        **{f"scan_{k}": v for k, v in mem_scan.items()},
+        **{f"fused_{k}": v for k, v in mem_fused.items()},
+    }
+
+
+def train_fused_table(
+    nx_list=(8, 16), batches=(16, 64, 256), t_len: int = 64, reps: int = 3,
+    long_ts=(256, 1024), smoke: bool = False,
+) -> List[Dict]:
+    """Fused vs scan truncated-BP gradients: (Nx, B) grid at T=``t_len``
+    plus a T sweep (``long_ts``) at the largest (Nx, B) cell.
+
+    Per cell: best-of-``reps`` wall time of one jitted grad step for both
+    paths (samples/sec + speedup), plus the memory columns of each
+    program.  The scan baseline's backward must hold the stacked (B, T,
+    Nx) states; the fused path carries only the O(Nx^2) DPRR accumulator -
+    ``*_temp_alloc_bytes`` makes the drop auditable per cell, and the T
+    sweep shows it staying flat while the scan baseline's grows with T
+    (which is also where the wall-clock crossover lives: at short T the
+    stacked states fit in cache and there is nothing to win).
+    """
+    if smoke:
+        nx_list, batches, t_len, reps, long_ts = (8,), (16,), 16, 1, ()
+    rows: List[Dict] = []
+    for nx in nx_list:
+        for b in batches:
+            rows.append(_train_fused_cell(nx, b, t_len, reps))
+    for t_long in long_ts:
+        rows.append(_train_fused_cell(nx_list[-1], batches[-1], t_long, reps))
+    # the acceptance cell gets extra pairs: it gates CI at a ratio
+    rows.append(_refine_population_row(smoke=smoke,
+                                       reps=reps if smoke else max(reps, 5)))
+    return rows
+
+
+def _refine_population_row(smoke: bool = False, reps: int = 3) -> Dict:
+    """The acceptance cell: population refinement through the fused path
+    vs the scan path at Nx=16, B=256 (Nx=8, B=32 in smoke mode).  T=1024
+    with a full-window SGD step (minibatch = B) is the long-episode
+    regime the fused kernel exists for - the scan path must stack
+    K x (B, T, Nx) states per step, far past cache, while the fused
+    path's activations stay O(K B Nx^2)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import masking, population
+    from repro.core.types import DFRParams
+
+    nx, b, k, t_len = (8, 32, 2, 16) if smoke else (16, 256, 4, 1024)
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=nx, nonlinearity="tanh")
+    mask = masking.make_mask(jax.random.PRNGKey(0), cfg.n_nodes, cfg.n_in,
+                             cfg.dtype)
+    key = jax.random.PRNGKey(1)
+    pop = DFRParams(
+        p=jnp.linspace(0.1, 0.8, k).astype(cfg.dtype),
+        q=jnp.linspace(-0.5, 0.5, k).astype(cfg.dtype),
+        W=0.05 * jax.random.normal(key, (k, cfg.n_classes, cfg.n_rep),
+                                   cfg.dtype),
+        b=jnp.zeros((k, cfg.n_classes), cfg.dtype),
+    )
+    u = jax.random.normal(jax.random.PRNGKey(2), (b, t_len, cfg.n_in),
+                          cfg.dtype)
+    lengths = jnp.full((b,), t_len, jnp.int32)
+    y = jax.nn.one_hot(jnp.arange(b) % 4, 4, dtype=cfg.dtype)
+    lr = jnp.asarray(0.05, cfg.dtype)
+
+    def go(fused):
+        return jax.jit(partial(
+            population.refine_population, cfg, mask, pop, u, lengths, y,
+            lr, lr, steps=1, minibatch=b, fused=fused,
+        ))
+
+    t_scan, t_fused = _paired_times(go(False), go(True), reps=reps)
+    return {
+        "table": "train-fused", "cell": f"refine/Nx{nx}/B{b}/K{k}/T{t_len}",
+        "fused_time_s": round(t_fused, 6),
+        "scan_samples_per_s": round(b * k / t_scan, 1),
+        "fused_samples_per_s": round(b * k / t_fused, 1),
+        "fused_over_scan_speedup": round(t_scan / t_fused, 3),
+    }
+
+
+def run_train_fused(full: bool = False) -> List[Dict]:
+    return train_fused_table(reps=5 if full else 3)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 rep: the CI training-kernel lane")
+    args = ap.parse_args()
+    for row in train_fused_table(smoke=args.smoke):
+        print(json.dumps(row))

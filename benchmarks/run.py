@@ -16,7 +16,8 @@ def _emit(rows):
     for r in rows:
         name = r.pop("table")
         key = r.pop("dataset", r.pop("cell", ""))
-        us = r.pop("bp_time_s", r.pop("gaussian_us", r.pop("bound_s", 0.0)))
+        us = r.pop("bp_time_s", r.pop("gaussian_us", r.pop(
+            "bound_s", r.pop("fused_time_s", 0.0))))
         derived = ";".join(f"{k}={v}" for k, v in r.items())
         print(f"{name}/{key},{us},{derived}")
 
@@ -28,7 +29,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: ridge,backprop,truncation,system,"
                          "population,stream,stream_quant,stream_planner,"
-                         "stream_drift,roofline")
+                         "stream_drift,train_fused,roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_backprop, bench_population, bench_ridge,
@@ -46,6 +47,7 @@ def main() -> None:
         "stream_quant": lambda: bench_stream.run_quant(args.full),
         "stream_planner": lambda: bench_stream.run_planner(args.full),
         "stream_drift": lambda: bench_stream.run_drift(args.full),
+        "train_fused": lambda: bench_backprop.run_train_fused(args.full),
         "roofline": lambda: roofline.summary_csv(),
     }
     # opt-in only: the sharded sweep re-execs under 8 forced XLA devices,
@@ -108,6 +110,18 @@ _BENCH_JSON = {
         "step blocking and int8 serving; the 8-device sharded episode is "
         "bitwise the plain one (CI parity tests), so its accuracy is the "
         "plain column",
+    ),
+    "train_fused": (
+        "BENCH_train_fused.json",
+        "fused training kernel (no materialized state tensor) vs scan "
+        "baseline: truncated-BP grads + population refinement",
+        "samples/sec and speedup columns are wall-clock on this host (CI "
+        "containers often expose 1-2 cores, flattening memory-bound "
+        "wins); the *_hlo_flops/_hlo_mem_bytes and *_temp_alloc_bytes "
+        "columns are host-independent - fused_temp_alloc_bytes staying "
+        "flat in T while scan_temp_alloc_bytes grows ~linearly is the "
+        "O(T*Nx)->O(Nx^2) per-sample activation-memory claim, auditable "
+        "per cell",
     ),
     "stream_planner": (
         "BENCH_stream_planner.json",

@@ -19,6 +19,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dprr as dprr_mod
 from repro.core import reservoir as res_mod
@@ -243,6 +244,145 @@ def grads_truncated(
         params, j_seq, onehot, f, lengths, loss_fn
     )
     return loss, g
+
+
+# ---------------------------------------------------------------------------
+# Fused truncated backprop: the production training path.
+#
+# The forward runs the fused reservoir->DPRR kernel (``kernels.ops.
+# train_forward``) that never materializes the state sequence X, and the
+# backward is a ``jax.custom_vjp`` implementing Eq. 33-36 in closed form
+# from the four emitted tensors (r, x(T), x(T-1), j(T)) - the exact
+# quantities the FPGA latches for its truncated update.  Validated against
+# both ``grads_truncated_manual`` and the stop_gradient autodiff path in
+# tests/test_train_fused.py.
+# ---------------------------------------------------------------------------
+
+
+class _FusedSpec(NamedTuple):
+    """Static (hashable) half of the fused forward's signature: the
+    nonlinearity plus the kernel dispatch knobs, and the time length the
+    backward needs to rebuild j_seq's (identically zero) cotangent."""
+
+    f: Callable[[Array], Array]
+    backend: Optional[str]
+    chunk_t: Optional[int]
+    block_b: int
+    t_len: int
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_features(spec, p, q, j_seq, lengths):
+    from repro.kernels import ops as kops
+
+    return kops.train_forward(
+        j_seq, lengths, p, q, j_seq.shape[-1],
+        f=spec.f, block_b=spec.block_b, chunk_t=spec.chunk_t,
+        backend=spec.backend,
+    )
+
+
+def _fused_features_fwd(spec, p, q, j_seq, lengths):
+    out = _fused_features(spec, p, q, j_seq, lengths)
+    r, x_last, x_prev, j_last = out
+    # residuals are O(Nx) per sample - X was never materialized, and the
+    # backward re-reads nothing else (Table 7's truncated storage words)
+    return out, (p, q, x_last, x_prev, j_last, lengths)
+
+
+def _fused_features_bwd(spec, res, cts):
+    p, q, x_last, x_prev, j_last, lengths = res
+    # only r's cotangent is honored: the truncation stop_gradients the
+    # boundary tensors wherever they are consumed (truncated_loss_from_aux),
+    # so their cotangents are identically zero on every training path
+    dr = cts[0]
+    n_nodes = x_last.shape[-1]
+
+    # Eq. 33:  bpv_n = sum_j x(T-1)_j dL/dr_{(n-1)Nx+j} + dL/dr_{Nx^2+n}
+    dr_outer = dr[..., : n_nodes * n_nodes].reshape(
+        *dr.shape[:-1], n_nodes, n_nodes
+    )
+    dr_sum = dr[..., n_nodes * n_nodes:]
+    bpv = jnp.einsum("...nj,...j->...n", dr_outer, x_prev) + dr_sum
+
+    # Eq. 34: reversed ring recurrence, closed form via L(q)
+    Lq = res_mod.ring_matrix(q, n_nodes, bpv.dtype)
+    dx = jnp.einsum("nm,...n->...m", Lq, bpv)
+
+    # Eq. 35 / Eq. 36
+    f_T = spec.f(j_last + x_prev)
+    grad_p = jnp.sum(f_T * dx).astype(p.dtype)
+    x_shift = jnp.concatenate(
+        [x_prev[..., -1:], x_last[..., :-1]], axis=-1
+    )
+    grad_q = jnp.sum(x_shift * dx).astype(q.dtype)
+
+    dj = jnp.zeros(
+        (*x_prev.shape[:-1], spec.t_len, n_nodes), x_prev.dtype
+    )
+    dlen = np.zeros(np.shape(lengths), jax.dtypes.float0)
+    return grad_p, grad_q, dj, dlen
+
+
+_fused_features.defvjp(_fused_features_fwd, _fused_features_bwd)
+
+
+def forward_fused(
+    params: DFRParams,
+    j_seq: Array,
+    f: Callable[[Array], Array],
+    lengths: Optional[Array] = None,
+    *,
+    backend: Optional[str] = None,
+    chunk_t: Optional[int] = None,
+    block_b: int = 8,
+) -> ForwardAux:
+    """``forward`` through the fused no-materialized-X kernel path.
+
+    Same ForwardAux contract (values equal to ``forward`` up to the fp
+    reordering of the DPRR reduction); differentiable, with the custom
+    truncated VJP - ``jax.grad`` of a loss over its logits/r IS the
+    truncated gradient, no stop_gradient machinery needed.
+    """
+    t_len = j_seq.shape[-2]
+    if lengths is None:
+        lengths = jnp.full(j_seq.shape[:-2], t_len, jnp.int32)
+    spec = _FusedSpec(f, backend, chunk_t, block_b, t_len)
+    r, x_last, x_prev, j_last = _fused_features(
+        spec, params.p, params.q, j_seq, lengths
+    )
+    logits = r @ params.W.T + params.b
+    probs = jax.nn.softmax(logits, axis=-1)
+    return ForwardAux(logits, probs, r, x_last, x_prev, j_last)
+
+
+def grads_truncated_fused(
+    params: DFRParams,
+    j_seq: Array,
+    onehot: Array,
+    f: Callable[[Array], Array],
+    lengths: Optional[Array] = None,
+    loss_fn: Callable[[Array, Array], Array] = loss_from_logits,
+    *,
+    backend: Optional[str] = None,
+    chunk_t: Optional[int] = None,
+    block_b: int = 8,
+) -> Tuple[Array, DFRParams]:
+    """Truncated-BP gradients through the fused forward (production path).
+
+    Identical contract to ``grads_truncated``; (W, b) gradients flow
+    through the readout autodiff while (p, q) come from the closed-form
+    custom VJP, so the whole backward is O(Nx^2) work with no scan
+    transpose."""
+
+    def _loss(prm):
+        aux = forward_fused(
+            prm, j_seq, f, lengths,
+            backend=backend, chunk_t=chunk_t, block_b=block_b,
+        )
+        return jnp.sum(loss_fn(aux.logits, onehot))
+
+    return jax.value_and_grad(_loss)(params)
 
 
 # ---------------------------------------------------------------------------

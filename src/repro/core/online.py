@@ -410,6 +410,7 @@ def online_serve_step(
     forget: Optional[Array] = None,  # lambda in (0, 1]: decay per sample
     train: bool = True,
     track_state_absmax: bool = False,
+    fused: bool = False,
 ) -> Tuple[OnlineState, Array, Dict[str, Array]]:
     """Fused infer-before-update + train step for the serving path.
 
@@ -490,12 +491,21 @@ def online_serve_step(
     moves and no extra math is compiled, keeping the fp32 serving program
     identical to the pre-quantization build.
 
+    ``fused`` (static) routes the shared forward through the fused
+    reservoir->DPRR kernel path (``backprop.forward_fused``) that never
+    materializes the state sequence.  The truncated gradients, statistics
+    and calibration all consume the same ForwardAux fields, so nothing
+    downstream changes.  Default False: the fused DPRR reduction reorders
+    fp accumulation, and the fp32 serving episode is regression-pinned
+    bitwise to the PR-6 golden - opt in per server, not globally.
+
     Returns (new state, logits (B, Ny), metrics).
     """
     f = cfg.f()
     j_seq = masking.apply_mask(mask, u)
     onehot = jax.nn.one_hot(label, cfg.n_classes, dtype=cfg.dtype)
-    aux = backprop.forward(state.params, j_seq, f, lengths=length)
+    fwd = backprop.forward_fused if fused else backprop.forward
+    aux = fwd(state.params, j_seq, f, lengths=length)
 
     w = weight.astype(cfg.dtype)
     loss_fn = lambda lg, oh: w * backprop.loss_from_logits(lg, oh)  # noqa: E731

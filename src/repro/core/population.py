@@ -195,7 +195,7 @@ def evaluate_population(
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("cfg", "steps", "minibatch", "loss"))
+@partial(jax.jit, static_argnames=("cfg", "steps", "minibatch", "loss", "fused"))
 def refine_population(
     cfg: DFRConfig,
     mask: Array,
@@ -208,17 +208,27 @@ def refine_population(
     steps: int = 1,
     minibatch: int = 4,
     loss: str = "ce",
+    fused: bool = True,
 ) -> Tuple[DFRParams, Array]:
     """``steps`` epochs of truncated-BP SGD on every member concurrently.
 
     All members see the same minibatch schedule; the member loop is a vmap,
     the minibatch loop a lax.scan - one fused program for the whole
     population.  Returns (refined population, (K,) final-epoch mean loss).
+
+    ``fused=True`` (production default) runs each SGD step through the
+    fused reservoir->DPRR forward with the closed-form truncated VJP
+    (``backprop.grads_truncated_fused``): the state sequence is never
+    materialized and the backward is O(Nx^2).  ``fused=False`` keeps the
+    scan + stop_gradient autodiff path (the same gradients up to fp
+    reduction order - the benchmark baseline).
     """
     if steps == 0:
         return pop, jnp.zeros(pop.p.shape, pop.p.dtype)
     f = cfg.f()
     loss_fn = backprop.loss_from_logits if loss == "ce" else backprop.loss_mse
+    grads = (backprop.grads_truncated_fused if fused
+             else backprop.grads_truncated)
     mb = min(minibatch, u.shape[0])
     n = u.shape[0] // mb * mb
     u_b = u[:n].reshape(-1, mb, *u.shape[1:])
@@ -229,7 +239,7 @@ def refine_population(
         def sgd_step(params, inp):
             ub, lb, yb = inp
             j_seq = masking.apply_mask(mask, ub)
-            l, g = backprop.grads_truncated(
+            l, g = grads(
                 params, j_seq, yb, f, lengths=lb, loss_fn=loss_fn
             )
             new = backprop.apply_sgd(

@@ -15,6 +15,7 @@ trainable; the mask M is fixed random, as in the paper.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -49,6 +50,25 @@ NONLINEARITIES: dict[str, Callable[..., Array]] = {
 }
 
 
+@functools.lru_cache(maxsize=None)
+def cached_nonlinearity(nonlinearity: str, alpha: float) -> Callable[[Array], Array]:
+    """The bound nonlinearity ``z -> f(z, alpha)`` as a *stable* callable.
+
+    Every jitted entry point that takes ``f`` as a static argument
+    (``run_reservoir``, ``ops.reservoir_states``, ``ops.streaming_logits*``,
+    the backprop paths) keys its compilation cache on the callable's
+    identity.  ``DFRConfig.f()`` used to build a fresh lambda per call, so
+    any call site outside a jit trace silently recompiled the same program
+    on every invocation.  The lru_cache makes repeated requests for the
+    same (nonlinearity, alpha) return the *same object*, turning those
+    retraces into cache hits (regression-tested via ``jit._cache_size()``).
+    """
+    fn = NONLINEARITIES[nonlinearity]
+    if nonlinearity == "mackey_glass":
+        return fn  # ignores alpha; default mg_p=2.0 (matches the old lambda)
+    return functools.partial(fn, alpha=alpha)
+
+
 @dataclasses.dataclass(frozen=True)
 class DFRConfig:
     """Static configuration of a modular DFR classifier."""
@@ -80,10 +100,9 @@ class DFRConfig:
         return self.n_nodes * self.n_nodes + self.n_nodes + 1
 
     def f(self) -> Callable[[Array], Array]:
-        fn = NONLINEARITIES[self.nonlinearity]
-        if self.nonlinearity == "mackey_glass":
-            return lambda z: fn(z)
-        return lambda z: fn(z, self.alpha)
+        """The config's nonlinearity as a stable (identity-cached) callable,
+        safe to pass as a static jit argument from non-traced call sites."""
+        return cached_nonlinearity(self.nonlinearity, float(self.alpha))
 
 
 @jax.tree_util.register_pytree_node_class

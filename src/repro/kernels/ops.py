@@ -26,6 +26,7 @@ from repro.kernels.reservoir import reservoir_pallas
 from repro.kernels.ridge_solve import ridge_solve_blocked, cholesky_blocked
 from repro.kernels.streaming import (streaming_step_pallas,
                                      streaming_step_pallas_q8)
+from repro.kernels.train import train_forward_pallas, train_forward_scan
 
 
 def _auto_backend(backend: Optional[str]) -> str:
@@ -161,6 +162,68 @@ def reservoir_states(
         interpret=(backend == "interpret"),
     )
     return xs[:b, :t, :nx]
+
+
+# ---------------------------------------------------------------------------
+# Fused training forward (reservoir -> DPRR aux, no materialized X)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "f", "block_b", "chunk_t", "backend")
+)
+def train_forward(
+    j_seq: jax.Array,      # (B, T, Nx) or (T, Nx) masked inputs
+    lengths: Optional[jax.Array],  # (B,) int32 (or None = full length)
+    p: jax.Array,
+    q: jax.Array,
+    n_nodes: int,
+    *,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+    block_b: int = 8,
+    chunk_t: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> tuple:
+    """Fused training forward: ``(r, x_last, x_prev, j_last)`` in logical
+    shapes, with the state sequence X never materialized (see
+    kernels.train).  These are exactly the data-dependent ``ForwardAux``
+    fields of ``core.backprop`` — the truncated-BP production path
+    (``backprop.forward_fused`` wraps this in the custom-VJP layer).
+
+    ``chunk_t=None`` sizes the sequential time chunk to the window (capped
+    at 128) like ``streaming_logits``; ``block_b`` tiles the batch axis of
+    the Pallas grid.  The XLA backend ignores both (its single fused scan
+    has no tiling).
+    """
+    backend = _auto_backend(backend)
+    nx = j_seq.shape[-1]
+    assert nx == n_nodes
+    if backend == "xla" or j_seq.ndim == 2:
+        # the Pallas grid is batched; the unbatched (T, Nx) form only
+        # occurs on host-side call sites, which the scan serves directly
+        return train_forward_scan(j_seq, lengths, p, q, f=f)
+
+    b, t = j_seq.shape[0], j_seq.shape[1]
+    if lengths is None:
+        lengths = jnp.full((b,), t, jnp.int32)
+    if chunk_t is None:
+        chunk_t = min(128, -(-t // 8) * 8)
+    n_pad = max(128, -(-nx // 128) * 128)
+    jp = _pad_to(_pad_to(_pad_to(j_seq.astype(jnp.float32), 2, n_pad),
+                         1, chunk_t), 0, block_b)
+    Lp, qp = _ring_padded(q, nx, n_pad)
+    lens = _pad_to(jnp.clip(lengths.astype(jnp.int32), 0, t), 0, block_b)
+    acc, x_last, x_prev, j_last = train_forward_pallas(
+        jp, Lp, qp, lens, p, q, nx,
+        f=f, block_b=block_b, chunk_t=chunk_t,
+        interpret=(backend == "interpret"),
+    )
+    dt = j_seq.dtype
+    outer = acc[:b, :nx, :nx].reshape(b, nx * nx)
+    sums = acc[:b, :nx, nx]
+    r = jnp.concatenate([outer, sums], axis=-1).astype(dt)
+    return (r, x_last[:b, :nx].astype(dt), x_prev[:b, :nx].astype(dt),
+            j_last[:b, :nx].astype(dt))
 
 
 # ---------------------------------------------------------------------------

@@ -173,6 +173,61 @@ def streaming_q8_sim(
     return jax.vmap(one)(j_seq, lengths.astype(jnp.int32))
 
 
+def train_forward_ref(
+    j_seq: jax.Array,      # (B, T_pad, n_pad) f32 masked inputs, zero padded
+    L: jax.Array,          # (n_pad, n_pad) ring matrix, zero padded + mirrored
+    qpow: jax.Array,       # (n_pad,) f32 ring powers
+    lengths: jax.Array,    # (B,) int32
+    p: jax.Array,
+    n_nodes: int,
+    f: Callable[[jax.Array], jax.Array] = lambda z: z,
+):
+    """Oracle of kernels.train.train_forward_pallas on padded shapes.
+
+    Mirrors the kernel's per-step op sequence exactly (same dots on the
+    same padded operands, same masking, same boundary latch order), so the
+    interpret-mode kernel agrees with it bit for bit.  Returns
+    ``(acc, x_last, x_prev, j_last)`` in the kernel's padded layout.
+    """
+    t_pad, n_pad = j_seq.shape[1], j_seq.shape[2]
+    Lt = L.T
+    col = jnp.arange(n_pad)[None, :]
+
+    def one(jb, length):
+        def step(carry, inp):
+            x_prev, acc, x_bnd, j_bnd = carry
+            j_k, k = inp
+            a = p.astype(jnp.float32) * f(j_k + x_prev)
+            x_k = jax.lax.dot(
+                a, Lt, preferred_element_type=jnp.float32
+            ) + x_prev[:, -1:] * qpow[None, :]
+            is_bnd = k == length - 1
+            x_bnd = jnp.where(is_bnd, x_prev, x_bnd)
+            j_bnd = jnp.where(is_bnd, j_k, j_bnd)
+            live = k < length
+            x_k = jnp.where(live, x_k, x_prev)
+            x1m = jnp.where((col < n_nodes) & live, x_k, 0.0)
+            x0_aug = jnp.where(
+                col < n_nodes, x_prev, jnp.where(col == n_nodes, 1.0, 0.0)
+            )
+            acc = acc + jax.lax.dot_general(
+                x1m, x0_aug,
+                dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            return (x_k, acc, x_bnd, j_bnd), None
+
+        z_row = jnp.zeros((1, n_pad), jnp.float32)
+        carry0 = (z_row, jnp.zeros((n_pad, n_pad), jnp.float32), z_row, z_row)
+        (x_last, acc, x_bnd, j_bnd), _ = jax.lax.scan(
+            step, carry0,
+            (jb[:, None, :], jnp.arange(t_pad, dtype=jnp.int32)),
+        )
+        return acc, x_last[0], x_bnd[0], j_bnd[0]
+
+    return jax.vmap(one)(j_seq, lengths.astype(jnp.int32))
+
+
 def reservoir_ref(
     j_seq: jax.Array,      # (B, T_pad, n_pad)
     x0: jax.Array,         # (B, n_pad)

@@ -50,7 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dprr, masking, reservoir, ridge
+from repro.core import dprr, masking, ridge
+from repro.kernels import ops as kops
 from repro.core.candidates import (
     P_LOG_RANGE,
     Q_LOG_RANGE,
@@ -91,13 +92,21 @@ def _evaluate_triples(
     vector - the autotuner adapts it continuously, and baking it into the
     static config would recompile every round.  Returns ``(nrmse, acc,
     Wt)`` with Wt (K, Ny, s) the ridge readout fitted on the fit split.
+
+    Features come from the fused training forward (``kernels.ops.
+    train_forward``): the reservoir scan and the DPRR accumulation run in
+    one pass with the (B, T, Nx) state sequence never materialized, so a
+    tuning round's activation memory is O(Nx^2) per member-sample instead
+    of O(T Nx) - the same production path ``population.refine_population``
+    trains through.
     """
     f = cfg.f()
 
     def feats(p, q, u, lengths):
         j_seq = masking.apply_mask(mask, u)
-        x = reservoir.run_reservoir(p, q, j_seq, f=f, lengths=lengths)
-        return dprr.compute_dprr(x, lengths=lengths)
+        r, _, _, _ = kops.train_forward(j_seq, lengths, p, q,
+                                        cfg.n_nodes, f=f)
+        return r
 
     vfeats = jax.vmap(feats, in_axes=(0, 0, None, None))
     rt_fit = dprr.r_tilde(vfeats(ps, qs, fit_u, fit_len))    # (K, B, s)

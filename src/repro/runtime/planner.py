@@ -36,8 +36,12 @@ ingredients:
   than the s^3 round, at W=8/Nx=8 they are not.
 
 * **The search** (``Planner.search``): enumerate the feasible knob
-  lattice (refresh_mode x cohorts x step_block, minus combinations the
-  server rejects) and return the predicted-best ``Plan``.  The objective
+  lattice (refresh_mode x cohorts x step_block x chunk_t, minus
+  combinations the server rejects) and return the predicted-best
+  ``Plan``.  The Pallas time-chunk ``chunk_t`` only reshapes the lowered
+  program on a Pallas-capable backend, so the searched chunk sizes
+  default to ``(None,)`` off-TPU - the XLA path ignores the knob and
+  pricing identical programs repeatedly would only burn compiles.  The objective
   is predicted served-samples/sec; cohort staggering only reshapes the
   latency tail, so a pure-throughput search keeps cohorts=1 - ``Plan``
   carries the predicted per-step refresh spike so callers with a p99
@@ -276,12 +280,13 @@ def get_calibration(path: Optional[str] = None,
 
 @functools.lru_cache(maxsize=None)
 def program_cost(n_nodes: int, n_classes: int, n_streams: int, window: int,
-                 t_len: int, quantize: str = "none") -> Tuple[float, float]:
+                 t_len: int, quantize: str = "none",
+                 chunk_t: Optional[int] = None) -> Tuple[float, float]:
     """(FLOPs, HBM bytes) of one slot-batched serving-logits dispatch.
 
     Lowers the fused streaming-logits program (S slots x W windows of T
     reservoir steps + the readout contraction) once per distinct
-    ``(Nx, n_classes, S, window, t_len, quantize)`` and walks the
+    ``(Nx, n_classes, S, window, t_len, quantize, chunk_t)`` and walks the
     optimized HLO with ``launch.hlo_cost`` - exact loop-aware dot FLOPs
     and memory traffic, memoized so bench sweeps and planner searches
     never pay a redundant lower+compile.
@@ -306,12 +311,12 @@ def program_cost(n_nodes: int, n_classes: int, n_streams: int, window: int,
         wq = jnp.zeros((S, n_classes, nr), jnp.int8)
         sc = jnp.full((S,), 0.01, jnp.float32)
         fn = jax.jit(functools.partial(
-            ops.streaming_logits_slots_q8, n_nodes=Nx))
+            ops.streaming_logits_slots_q8, n_nodes=Nx, chunk_t=chunk_t))
         lowered = fn.lower(j, lengths, p, q, wq, sc, sc, b)
     else:
         wf = jnp.zeros((S, n_classes, nr), jnp.float32)
         fn = jax.jit(functools.partial(
-            ops.streaming_logits_slots, n_nodes=Nx))
+            ops.streaming_logits_slots, n_nodes=Nx, chunk_t=chunk_t))
         lowered = fn.lower(j, lengths, p, q, wf, b)
     cost = hlo_cost.analyze(lowered.compile().as_text())
     return cost.flops, cost.mem_bytes
@@ -333,6 +338,7 @@ def predict_step_cost(
     quantize: str = "none",
     backend: Optional[str] = None,
     *,
+    chunk_t: Optional[int] = None,
     n_classes: int = 4,
     t_len: int = 24,
     refresh_every: int = 5,
@@ -359,12 +365,12 @@ def predict_step_cost(
     Ny = int(n_classes)
 
     # (a) the serving-logits program, exact per-program work
-    flops, mem = program_cost(Nx, Ny, S, W, t_len, "none")
+    flops, mem = program_cost(Nx, Ny, S, W, t_len, "none", chunk_t)
     sub_step = flops * cal.c_flop + mem * cal.c_byte
     if quantize == "int8":
         # armed-lane int8 logits run IN ADDITION to the fp32 lane select
         # (unarmed slots serve fp32), plus the per-step absmax tracking
-        qf, qm = program_cost(Nx, Ny, S, W, t_len, "int8")
+        qf, qm = program_cost(Nx, Ny, S, W, t_len, "int8", chunk_t)
         sub_step += qf * cal.c_flop + qm * cal.c_byte
         sub_step += S * W * t_len * Nx * cal.c_quant
 
@@ -424,14 +430,22 @@ class Plan:
     predicted_s_per_sample: float
     predicted_samples_per_s: float
     predicted_refresh_spike_s: float
+    chunk_t: Optional[int] = None
 
     def knobs(self) -> Dict[str, object]:
         return {"refresh_mode": self.refresh_mode,
                 "refresh_cohorts": self.refresh_cohorts,
-                "step_block": self.step_block}
+                "step_block": self.step_block,
+                "chunk_t": self.chunk_t}
 
 
 DEFAULT_STEP_BLOCKS: Tuple[int, ...] = (1, 2, 4, 8)
+#: searched Pallas time-chunk sizes on a Pallas-capable backend.  ``None``
+#: (the kernels' own per-shape heuristic) comes FIRST: the search keeps the
+#: first argmin on ties, so backends where chunk_t cannot change the program
+#: (the XLA path ignores it) resolve to None and auto-config behavior is
+#: bitwise what it was before the knob existed.
+DEFAULT_CHUNK_TS: Tuple[Optional[int], ...] = (None, 64, 128, 256)
 
 
 class Planner:
@@ -465,11 +479,12 @@ class Planner:
         self.cal = cal or get_calibration()
 
     def predict(self, refresh_mode: str, refresh_cohorts: int = 1,
-                step_block: int = 1) -> float:
+                step_block: int = 1,
+                chunk_t: Optional[int] = None) -> float:
         return predict_step_cost(
             self.Nx, self.S, self.window, self.retirement, refresh_mode,
             refresh_cohorts, step_block, self.quantize,
-            n_classes=self.n_classes, t_len=self.t_len,
+            chunk_t=chunk_t, n_classes=self.n_classes, t_len=self.t_len,
             refresh_every=self.refresh_every, cal=self.cal,
         )
 
@@ -478,9 +493,10 @@ class Planner:
         refresh_modes: Optional[Sequence[str]] = None,
         cohorts: Optional[Sequence[int]] = None,
         step_blocks: Optional[Sequence[int]] = None,
-    ) -> List[Tuple[str, int, int]]:
-        """The feasible (refresh_mode, cohorts, step_block) lattice under
-        the server's own validity rules."""
+        chunk_ts: Optional[Sequence[Optional[int]]] = None,
+    ) -> List[Tuple[str, int, int, Optional[int]]]:
+        """The feasible (refresh_mode, cohorts, step_block, chunk_t)
+        lattice under the server's own validity rules."""
         modes = tuple(refresh_modes or ("recompute", "incremental"))
         if self.retirement == "window":
             # the eviction downdates a live factor: incremental only
@@ -491,19 +507,31 @@ class Planner:
         blocks = tuple(step_blocks or DEFAULT_STEP_BLOCKS)
         if self.staging != "device":
             blocks = (1,)           # the blocked scan needs the staged pool
-        return [(m, c, b) for m in modes for c in cs for b in blocks]
+        if chunk_ts is None:
+            # chunk_t only reshapes the program on a Pallas-capable backend;
+            # elsewhere every chunk lowers the identical XLA program, so
+            # searching them would only pay redundant compiles
+            chunk_ts = (DEFAULT_CHUNK_TS
+                        if jax.default_backend() == "tpu" else (None,))
+        cts = tuple(chunk_ts)
+        return [(m, c, b, ct)
+                for m in modes for c in cs for b in blocks for ct in cts]
 
     def search(
         self,
         refresh_modes: Optional[Sequence[str]] = None,
         cohorts: Optional[Sequence[int]] = None,
         step_blocks: Optional[Sequence[int]] = None,
+        chunk_ts: Optional[Sequence[Optional[int]]] = None,
     ) -> Plan:
         """Predicted-best plan over the feasible lattice (throughput
-        objective; see the module docstring on cohorts/p99)."""
+        objective; see the module docstring on cohorts/p99).  Strict
+        argmin keeps the FIRST minimum, so the ``None``-first chunk_t
+        ordering resolves cost ties to the kernels' own heuristic."""
         best: Optional[Plan] = None
-        for mode, c, b in self.lattice(refresh_modes, cohorts, step_blocks):
-            t = self.predict(mode, c, b)
+        for mode, c, b, ct in self.lattice(
+                refresh_modes, cohorts, step_blocks, chunk_ts):
+            t = self.predict(mode, c, b, ct)
             plan = Plan(
                 refresh_mode=mode, refresh_cohorts=c, step_block=b,
                 predicted_s_per_sample=t,
@@ -512,6 +540,7 @@ class Planner:
                     self.Nx, self.S, mode, c, n_classes=self.n_classes,
                     cal=self.cal,
                 ),
+                chunk_t=ct,
             )
             if best is None or t < best.predicted_s_per_sample:
                 best = plan

@@ -317,6 +317,7 @@ def _step_core(
     quantize: str = "none",
     adapt_ratio: float = 1.2,
     adapt_warmup: int = 4,
+    chunk_t: Optional[int] = None,
 ) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
     """One server step: infer-before-update + train for every live slot.
 
@@ -437,6 +438,7 @@ def _step_core(
         logits = ops.streaming_logits_slots(
             j_seq, length, states.params.p, states.params.q,
             states.params.W, states.params.b, cfg.n_nodes, f=f,
+            chunk_t=chunk_t,
         )
     if quantize == "int8":
         # int8 fast path for ARMED slots (scales folded at least once):
@@ -448,7 +450,7 @@ def _step_core(
         q_logits = ops.streaming_logits_slots_q8(
             j_seq, length, states.params.p, states.params.q,
             states.quant.Wq, states.quant.w_scale, states.quant.x_scale,
-            states.params.b, cfg.n_nodes, f=f,
+            states.params.b, cfg.n_nodes, f=f, chunk_t=chunk_t,
         )
         armed = states.quant.w_scale > 0
         logits = jnp.where(
@@ -556,6 +558,7 @@ def _stream_step_impl(
     retirement: str = "none",
     adapt_ratio: float = 1.2,
     adapt_warmup: int = 4,
+    chunk_t: Optional[int] = None,
 ) -> Tuple[OnlineState, Optional[WindowState], Array, Dict[str, Array]]:
     """Host-staged serving step (the retained PR-4 fallback): the caller
     builds and uploads the padded window batch; see ``_step_core``."""
@@ -565,11 +568,12 @@ def _stream_step_impl(
         fused_infer=fused_infer, maintain_factor=maintain_factor,
         retirement=retirement,
         adapt_ratio=adapt_ratio, adapt_warmup=adapt_warmup,
+        chunk_t=chunk_t,
     )
 
 
 _STEP_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement",
-                 "adapt_ratio", "adapt_warmup")
+                 "adapt_ratio", "adapt_warmup", "chunk_t")
 _stream_step = jax.jit(_stream_step_impl, static_argnames=_STEP_STATICS)
 # donated twin: OnlineState (arg 2) and WindowState (arg 14) update in place
 _stream_step_donated = jax.jit(
@@ -626,6 +630,7 @@ def _stream_step_pool_impl(
     quantize: str = "none",
     adapt_ratio: float = 1.2,
     adapt_warmup: int = 4,
+    chunk_t: Optional[int] = None,
 ) -> Tuple[OnlineState, Optional[WindowState], Array]:
     """Device-resident serving step: cursor-indexed window gather from the
     staged ``RequestPool``, the fused serve step, and the cohort Ridge
@@ -654,6 +659,7 @@ def _stream_step_pool_impl(
         fused_infer=fused_infer, maintain_factor=maintain_factor,
         retirement=retirement, quantize=quantize,
         adapt_ratio=adapt_ratio, adapt_warmup=adapt_warmup,
+        chunk_t=chunk_t,
     )
 
     def _refresh(st: OnlineState) -> OnlineState:
@@ -679,7 +685,7 @@ def _stream_step_pool_impl(
 
 _POOL_STATICS = ("cfg", "fused_infer", "maintain_factor", "retirement",
                  "refresh_mode", "window", "quantize",
-                 "adapt_ratio", "adapt_warmup")
+                 "adapt_ratio", "adapt_warmup", "chunk_t")
 _stream_step_pool = jax.jit(
     _stream_step_pool_impl, static_argnames=_POOL_STATICS
 )
@@ -718,6 +724,7 @@ def _stream_step_pool_block_impl(
     quantize: str = "none",
     adapt_ratio: float = 1.2,
     adapt_warmup: int = 4,
+    chunk_t: Optional[int] = None,
 ) -> Tuple[OnlineState, Optional[WindowState], Array]:
     """Multi-sample step blocking: up to B = ``step_block`` consecutive
     pool steps in ONE dispatch, a ``lax.scan`` over the fused serving step.
@@ -756,6 +763,7 @@ def _stream_step_pool_block_impl(
                 retirement=retirement, refresh_mode=refresh_mode,
                 window=window, quantize=quantize,
                 adapt_ratio=adapt_ratio, adapt_warmup=adapt_warmup,
+                chunk_t=chunk_t,
             )
             return ns, nw, preds.astype(jnp.int32)
 
@@ -1098,6 +1106,7 @@ class StreamServer:
         devices: int = 1,
         quantize: str = "none",
         step_block: Optional[int] = None,
+        chunk_t: Optional[int] = None,
         config: Optional[str] = None,
     ):
         # -- config='auto': fill UNSET performance knobs from the calibrated
@@ -1125,6 +1134,8 @@ class StreamServer:
                 refresh_cohorts = self.plan.refresh_cohorts
             if step_block is None:
                 step_block = self.plan.step_block
+            if chunk_t is None:
+                chunk_t = self.plan.chunk_t
         # unset knobs without config='auto' keep the historical defaults
         if refresh_mode is None:
             refresh_mode = "recompute"
@@ -1185,6 +1196,10 @@ class StreamServer:
             raise ValueError(
                 f"step_block must be >= 1, got {step_block!r}"
             )
+        if chunk_t is not None and chunk_t < 1:
+            raise ValueError(
+                f"chunk_t must be None or >= 1, got {chunk_t!r}"
+            )
         if step_block > 1 and staging != "device":
             raise ValueError(
                 "step_block > 1 requires staging='device' (the blocked scan "
@@ -1227,6 +1242,9 @@ class StreamServer:
         self.donate = bool(donate)
         self.quantize = quantize
         self.step_block = int(step_block)
+        # Pallas time-chunk size for the fused streaming kernels; None keeps
+        # the per-shape heuristic in kernels.ops (also the XLA-backend no-op)
+        self.chunk_t = None if chunk_t is None else int(chunk_t)
         self._np_dtype = np.dtype(cfg.dtype)
         self.cohorts = RefreshCohorts(
             self.max_streams, self.refresh_every, refresh_cohorts
@@ -1526,6 +1544,7 @@ class StreamServer:
             retirement=self.retirement,
             adapt_ratio=self.adapt_ratio,
             adapt_warmup=self.adapt_warmup,
+            chunk_t=self.chunk_t,
         )
         if self.staging == "device":
             pool_kw = dict(

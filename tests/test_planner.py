@@ -112,24 +112,49 @@ def _mk_planner(cal, **over):
 
 def test_lattice_respects_window_retirement():
     pl = _mk_planner(_cal(), retirement="window")
-    assert {m for m, _, _ in pl.lattice()} == {"incremental"}
+    assert {m for m, _, _, _ in pl.lattice()} == {"incremental"}
 
 
 def test_lattice_restricts_host_staging_to_unblocked():
     pl = _mk_planner(_cal(), staging="host")
-    assert {b for _, _, b in pl.lattice()} == {1}
+    assert {b for _, _, b, _ in pl.lattice()} == {1}
+
+
+def test_lattice_searches_chunk_t_only_where_it_lowers_differently():
+    """Off-TPU the XLA path ignores chunk_t: the default lattice must not
+    burn compiles pricing identical programs (ROADMAP note closed by the
+    chunk_t lattice dimension).  An explicit chunk_ts always wins."""
+    import jax
+
+    pl = _mk_planner(_cal())
+    cts = {ct for _, _, _, ct in pl.lattice()}
+    if jax.default_backend() == "tpu":
+        assert cts == set(planner.DEFAULT_CHUNK_TS)
+    else:
+        assert cts == {None}
+    explicit = {ct for _, _, _, ct in pl.lattice(chunk_ts=(None, 32))}
+    assert explicit == {None, 32}
+
+
+def test_search_ties_resolve_chunk_t_to_none():
+    """chunk_t costs tie on a backend where the knob is a lowering no-op,
+    and the None-first ordering must keep the kernels' own heuristic -
+    auto-config behavior is bitwise pre-knob."""
+    pl = _mk_planner(_cal())
+    plan = pl.search(chunk_ts=(None, 64, 128))
+    assert plan.chunk_t is None
 
 
 def test_search_returns_lattice_argmin():
     pl = _mk_planner(_cal(c_dispatch=1e-3))
     plan = pl.search()
     assert isinstance(plan, Plan)
-    best = min(pl.predict(m, c, b) for m, c, b in pl.lattice())
+    best = min(pl.predict(m, c, b, ct) for m, c, b, ct in pl.lattice())
     assert plan.predicted_s_per_sample == pytest.approx(best)
     assert plan.predicted_samples_per_s == pytest.approx(
         1.0 / plan.predicted_s_per_sample)
     assert plan.knobs().keys() == {"refresh_mode", "refresh_cohorts",
-                                   "step_block"}
+                                   "step_block", "chunk_t"}
 
 
 # -- calibration persistence -------------------------------------------------

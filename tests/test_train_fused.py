@@ -1,0 +1,321 @@
+"""Fused training forward (kernels.train / backprop.forward_fused, PR 10).
+
+Three layers of parity pin the production training path:
+
+* the custom-VJP backward (paper Eq. 33-36 in closed form) against BOTH
+  ``grads_truncated_manual`` (the paper equations, literally) and
+  ``grads_truncated`` (autodiff of the stop_gradient objective) - a
+  hypothesis battery over shapes, signs of q, ragged lengths and dtypes;
+* the interpret-backend Pallas kernel BITWISE against the ``kernels.ref``
+  oracle (same op order on padded shapes);
+* the call-site contracts: ``online_serve_step(fused=True)``,
+  ``refine_population(fused=...)`` and the jit-cache (retrace) regression
+  for the identity-cached ``DFRConfig.f()``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backprop as bp
+from repro.core import masking, online, population
+from repro.core.types import DFRConfig, DFRParams
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.train import train_forward_pallas, train_forward_scan
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # the CI property lane installs hypothesis;
+    HAVE_HYP = False         # bare hosts still run the deterministic sweep
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _setup(nx=6, ny=4, t=9, b=2, seed=0, nonlinearity="tanh",
+           dtype=jnp.float32):
+    cfg = DFRConfig(n_in=3, n_classes=ny, n_nodes=nx,
+                    nonlinearity=nonlinearity)
+    key = jax.random.PRNGKey(seed)
+    params = DFRParams(
+        p=jnp.float32(0.15), q=jnp.float32(0.45),
+        W=(0.05 * jax.random.normal(key, (ny, cfg.n_rep))).astype(dtype),
+        b=0.01 * jnp.ones(ny, dtype),
+    )
+    j_seq = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (b, t, nx)
+    ).astype(dtype)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 2), (b,), 0, ny)
+    onehot = jax.nn.one_hot(labels, ny, dtype=dtype)
+    return cfg, params, j_seq, onehot
+
+
+def _grad_close(g1, g2, rtol, atol):
+    for name in ("p", "q", "W", "b"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(g1, name), np.float32),
+            np.asarray(getattr(g2, name), np.float32),
+            rtol=rtol, atol=atol, err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# forward parity
+# ---------------------------------------------------------------------------
+
+
+def test_forward_fused_matches_forward():
+    cfg, params, j_seq, _ = _setup(t=17, b=3)
+    lengths = jnp.asarray([5, 17, 1], jnp.int32)
+    f = cfg.f()
+    ref = bp.forward(params, j_seq, f, lengths)
+    got = bp.forward_fused(params, j_seq, f, lengths)
+    for name in ("logits", "probs", "r", "x_last", "x_prev", "j_last"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, name)), np.asarray(getattr(ref, name)),
+            rtol=1e-5, atol=1e-6, err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# the hypothesis gradient-parity battery (fused VJP vs manual vs autodiff)
+# ---------------------------------------------------------------------------
+
+
+def _check_grad_parity(seed, nx, t, b, q, ragged):
+    cfg, params, j_seq, onehot = _setup(nx=nx, t=t, b=b, seed=seed)
+    params = DFRParams(p=params.p, q=jnp.float32(q), W=params.W, b=params.b)
+    lengths = None
+    if ragged:
+        lengths = jax.random.randint(
+            jax.random.PRNGKey(seed + 3), (b,), 1, t + 1
+        ).astype(jnp.int32)
+    f = cfg.f()
+    fp = lambda z: 1 - jnp.tanh(z) ** 2  # noqa: E731 (unused by the math)
+    lm, gm = bp.grads_truncated_manual(params, j_seq, onehot, f, fp, lengths)
+    la, ga = bp.grads_truncated(params, j_seq, onehot, f, lengths)
+    lf, gf = bp.grads_truncated_fused(params, j_seq, onehot, f, lengths)
+    assert float(abs(lf - lm)) < 1e-4 * max(1.0, float(abs(lm)))
+    assert float(abs(lf - la)) < 1e-4 * max(1.0, float(abs(la)))
+    _grad_close(gf, gm, rtol=2e-4, atol=1e-5)
+    _grad_close(gf, ga, rtol=2e-4, atol=1e-5)
+
+
+if HAVE_HYP:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**16),
+        nx=st.integers(2, 8),
+        t=st.integers(1, 24),
+        b=st.integers(1, 4),
+        q=st.floats(-0.9, 0.9, allow_nan=False),
+        ragged=st.booleans(),
+    )
+    def test_fused_grads_match_manual_and_autodiff(seed, nx, t, b, q,
+                                                   ragged):
+        _check_grad_parity(seed, nx, t, b, q, ragged)
+else:
+    @pytest.mark.parametrize(
+        "seed,nx,t,b,q,ragged",
+        [(0, 2, 1, 1, 0.4, False), (1, 6, 9, 2, -0.55, True),
+         (2, 8, 24, 4, 0.9, True), (3, 3, 16, 3, -0.9, False),
+         (4, 5, 12, 4, 0.0, True), (5, 7, 2, 2, 0.7, True)],
+    )
+    def test_fused_grads_match_manual_and_autodiff(seed, nx, t, b, q,
+                                                   ragged):
+        _check_grad_parity(seed, nx, t, b, q, ragged)
+
+
+def test_fused_grads_bf16_track_scan_autodiff():
+    """bf16 activations: the closed-form backward and the autodiff path
+    share the f32-accumulated forward, so they agree to bf16 resolution."""
+    cfg, params, j_seq, onehot = _setup(t=12, b=3, dtype=jnp.bfloat16)
+    params = DFRParams(p=jnp.bfloat16(0.15), q=jnp.bfloat16(0.45),
+                       W=params.W, b=params.b)
+    lengths = jnp.asarray([4, 12, 7], jnp.int32)
+    f = cfg.f()
+    la, ga = bp.grads_truncated(params, j_seq, onehot, f, lengths)
+    lf, gf = bp.grads_truncated_fused(params, j_seq, onehot, f, lengths)
+    assert float(abs(lf - la)) < 3e-2 * max(1.0, float(abs(la)))
+    _grad_close(gf, ga, rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("t", [7, 8, 9])
+def test_fused_grads_at_chunk_boundaries_interpret(t):
+    """T = chunk_t - 1 / chunk_t / chunk_t + 1 through the interpret-mode
+    Pallas kernel: the boundary latch and the padded-chunk freeze must not
+    leak into the gradients."""
+    cfg, params, j_seq, onehot = _setup(nx=4, t=t, b=3, seed=t)
+    lengths = jnp.asarray([t, max(1, t - 1), 1], jnp.int32)
+    f = cfg.f()
+    la, ga = bp.grads_truncated(params, j_seq, onehot, f, lengths)
+    lf, gf = bp.grads_truncated_fused(
+        params, j_seq, onehot, f, lengths,
+        backend="interpret", chunk_t=8, block_b=2,
+    )
+    assert float(abs(lf - la)) < 1e-4 * max(1.0, float(abs(la)))
+    _grad_close(gf, ga, rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: interpret backend vs the ref.py oracle (bitwise)
+# ---------------------------------------------------------------------------
+
+
+def _padded_operands(nx=5, t=11, b=3, seed=7, q=0.4):
+    j_seq = jax.random.normal(jax.random.PRNGKey(seed), (b, t, nx),
+                              jnp.float32)
+    lengths = jnp.asarray([t, 4, 1][:b], jnp.int32)
+    p, qv = jnp.float32(0.3), jnp.float32(q)
+    block_b, chunk_t, n_pad = 4, 8, 128
+    jp = kops._pad_to(kops._pad_to(kops._pad_to(j_seq, 2, n_pad),
+                                   1, chunk_t), 0, block_b)
+    Lp, qp = kops._ring_padded(qv, nx, n_pad)
+    lens = kops._pad_to(lengths, 0, block_b)
+    return jp, Lp, qp, lens, p, qv, nx, block_b, chunk_t
+
+
+@pytest.mark.parametrize("q", [0.4, -0.55])
+def test_interpret_kernel_bitwise_matches_ref_oracle(q):
+    jp, Lp, qp, lens, p, qv, nx, block_b, chunk_t = _padded_operands(q=q)
+    f = jnp.tanh
+    got = train_forward_pallas(jp, Lp, qp, lens, p, qv, nx, f=f,
+                               block_b=block_b, chunk_t=chunk_t,
+                               interpret=True)
+    ref = kref.train_forward_ref(jp, Lp, qp, lens, p, nx, f=f)
+    for g, r, name in zip(got, ref, ("acc", "x_last", "x_prev", "j_last")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                      err_msg=name)
+
+
+def test_interpret_matches_scan_fallback():
+    cfg, params, j_seq, _ = _setup(nx=4, t=13, b=5, seed=11)
+    lengths = jnp.asarray([13, 1, 7, 13, 2], jnp.int32)
+    f = cfg.f()
+    scan = kops.train_forward(j_seq, lengths, params.p, params.q, 4,
+                              f=f, backend="xla")
+    pall = kops.train_forward(j_seq, lengths, params.p, params.q, 4,
+                              f=f, backend="interpret", chunk_t=8,
+                              block_b=4)
+    for s, g, name in zip(scan, pall, ("r", "x_last", "x_prev", "j_last")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(s),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# retrace regression: DFRConfig.f() is identity-stable across calls
+# ---------------------------------------------------------------------------
+
+
+def test_cfg_f_identity_stable():
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=4, nonlinearity="tanh")
+    assert cfg.f() is cfg.f()
+    twin = DFRConfig(n_in=5, n_classes=2, n_nodes=8, nonlinearity="tanh")
+    assert cfg.f() is twin.f()          # same (nonlinearity, alpha) key
+
+
+def test_jitted_entry_points_do_not_retrace_on_fresh_f():
+    """The silent-retrace audit: repeated calls with ``cfg.f()`` built
+    fresh each time must HIT the jit cache of every entry point that takes
+    ``f`` statically (run_reservoir, ops.train_forward, ops.
+    streaming_logits)."""
+    from repro.core import reservoir
+
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=4, nonlinearity="tanh")
+    j = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 4), jnp.float32)
+    lengths = jnp.asarray([6, 3], jnp.int32)
+    p, q = jnp.float32(0.3), jnp.float32(0.4)
+    W = jnp.zeros((4, 20), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+
+    entry_calls = [
+        (reservoir.run_reservoir,
+         lambda f: reservoir.run_reservoir(p, q, j, f=f, lengths=lengths)),
+        (kops.train_forward,
+         lambda f: kops.train_forward(j, lengths, p, q, 4, f=f)),
+        (kops.streaming_logits,
+         lambda f: kops.streaming_logits(j, lengths, p, q, W, b, 4, f=f)),
+    ]
+    for entry, call in entry_calls:
+        call(DFRConfig(n_in=3, n_classes=4, n_nodes=4).f())
+        size = entry._cache_size()
+        for _ in range(3):
+            call(DFRConfig(n_in=3, n_classes=4, n_nodes=4).f())
+        assert entry._cache_size() == size, entry
+
+
+# ---------------------------------------------------------------------------
+# call-site contracts: serve step and population refinement
+# ---------------------------------------------------------------------------
+
+
+def test_online_serve_step_fused_matches_unfused():
+    cfg = DFRConfig(n_in=3, n_classes=4, n_nodes=5, nonlinearity="tanh")
+    mask = masking.make_mask(jax.random.PRNGKey(1), cfg.n_nodes, cfg.n_in,
+                             cfg.dtype)
+    state = online.init_state(cfg)
+    u = jax.random.normal(jax.random.PRNGKey(2), (3, 9, cfg.n_in), cfg.dtype)
+    length = jnp.asarray([9, 4, 1], jnp.int32)
+    label = jnp.asarray([0, 2, 1], jnp.int32)
+    lr = jnp.asarray(0.1, cfg.dtype)
+    weight = jnp.ones((3,), cfg.dtype)
+    acc = jnp.asarray(1.0, cfg.dtype)
+    out = {}
+    for fused in (False, True):
+        st, logits, metrics = online.online_serve_step(
+            cfg, mask, state, u, length, label, lr, weight, acc, fused=fused
+        )
+        out[fused] = (st, logits, metrics)
+    np.testing.assert_allclose(np.asarray(out[True][1]),
+                               np.asarray(out[False][1]),
+                               rtol=1e-5, atol=1e-6)
+    for leaf_t, leaf_f in zip(jax.tree_util.tree_leaves(out[True][0]),
+                              jax.tree_util.tree_leaves(out[False][0])):
+        np.testing.assert_allclose(np.asarray(leaf_t), np.asarray(leaf_f),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_refine_population_fused_matches_scan_path():
+    cfg = DFRConfig(n_in=3, n_classes=3, n_nodes=4, nonlinearity="tanh")
+    mask = masking.make_mask(jax.random.PRNGKey(3), cfg.n_nodes, cfg.n_in,
+                             cfg.dtype)
+    k = jax.random.PRNGKey(4)
+    pop = DFRParams(
+        p=jnp.asarray([0.2, 0.6], cfg.dtype),
+        q=jnp.asarray([0.4, -0.3], cfg.dtype),
+        W=0.05 * jax.random.normal(k, (2, cfg.n_classes, cfg.n_rep),
+                                   cfg.dtype),
+        b=jnp.zeros((2, cfg.n_classes), cfg.dtype),
+    )
+    u = jax.random.normal(jax.random.PRNGKey(5), (6, 8, cfg.n_in), cfg.dtype)
+    lengths = jnp.asarray([8, 5, 8, 2, 8, 8], jnp.int32)
+    y = jax.nn.one_hot(jnp.asarray([0, 1, 2, 0, 1, 2]), cfg.n_classes,
+                       dtype=cfg.dtype)
+    kw = dict(lr_res=jnp.asarray(0.05, cfg.dtype),
+              lr_out=jnp.asarray(0.05, cfg.dtype), steps=2, minibatch=3)
+    ref_pop, ref_loss = population.refine_population(
+        cfg, mask, pop, u, lengths, y, fused=False, **kw)
+    got_pop, got_loss = population.refine_population(
+        cfg, mask, pop, u, lengths, y, fused=True, **kw)
+    np.testing.assert_allclose(np.asarray(got_loss), np.asarray(ref_loss),
+                               rtol=1e-4, atol=1e-5)
+    for name in ("p", "q", "W", "b"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(got_pop, name)),
+            np.asarray(getattr(ref_pop, name)),
+            rtol=1e-4, atol=1e-5, err_msg=name,
+        )
+
+
+def test_scan_fallback_handles_unbatched_and_default_lengths():
+    cfg, params, j_seq, _ = _setup(nx=3, t=6, b=1)
+    f = cfg.f()
+    r_b, xl_b, xp_b, jl_b = train_forward_scan(
+        j_seq, None, params.p, params.q, f=f)
+    r_s, xl_s, xp_s, jl_s = train_forward_scan(
+        j_seq[0], None, params.p, params.q, f=f)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(r_b[0]),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(xp_s), np.asarray(xp_b[0]),
+                               rtol=1e-6, atol=1e-7)
